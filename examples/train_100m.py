@@ -1,0 +1,86 @@
+"""Train a ~100M-parameter llama-family model end-to-end.
+
+  PYTHONPATH=src python examples/train_100m.py --steps 300   # full run
+  PYTHONPATH=src python examples/train_100m.py --tiny        # CI-sized
+
+On one CPU core a full step at seq 512 takes ~30-60 s — the defaults here
+are sized for the container; on a pod the same script shards over
+make_production_mesh() via the launcher (repro.launch.train). Includes
+async checkpointing + resume and loss-curve printout.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.data.pipeline import make_pipeline
+from repro.models import build_model
+from repro.training import checkpoint as ckpt
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def config_100m() -> ModelConfig:
+    """~110M params: 12L × d768 GQA decoder, llama-style."""
+    return ModelConfig(
+        name="llama-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=32000, attention="full", rope_theta=10_000.0,
+        attn_chunk=256, remat="none")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tiny", action="store_true",
+                    help="shrink to CI size (seconds, not minutes)")
+    ap.add_argument("--ckpt-dir", default="/tmp/ck_100m")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    if args.tiny:
+        cfg = dataclasses.replace(cfg, num_layers=2, d_model=128,
+                                  num_heads=4, num_kv_heads=2, head_dim=32,
+                                  d_ff=256, vocab_size=512, vocab_pad_to=32)
+        args.steps = min(args.steps, 20)
+        args.seq, args.batch = 64, 8
+    model = build_model(cfg)
+    n = cfg.param_count()
+    print(f"model: {cfg.num_layers}L d={cfg.d_model} → {n / 1e6:.0f}M params")
+
+    tc = TrainConfig(learning_rate=6e-4, warmup_steps=20,
+                     total_steps=args.steps, checkpoint_every=50)
+    shape = ShapeConfig("train", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    pipe = make_pipeline(cfg, shape, seed=0)
+    step_fn = jax.jit(make_train_step(model, tc))
+
+    state = init_train_state(model, jax.random.key(0))
+    start = 0
+    if args.resume and ckpt.latest_steps(args.ckpt_dir):
+        start, state = ckpt.restore(args.ckpt_dir, state)
+        print(f"resumed from step {start}")
+
+    writer = None
+    ema = None
+    for i in range(start, args.steps):
+        state, m = step_fn(state, pipe.batch(i))
+        loss = float(m["loss"])
+        ema = loss if ema is None else 0.95 * ema + 0.05 * loss
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss={loss:.4f}  ema={ema:.4f}  "
+                  f"lr={float(m['lr']):.2e}")
+        if (i + 1) % tc.checkpoint_every == 0:
+            writer = ckpt.save(args.ckpt_dir, i + 1, state, async_=True)
+    if writer:
+        writer.join()
+    w = ckpt.save(args.ckpt_dir, args.steps, state, async_=True)
+    w.join()
+    print(f"done; checkpoints: {ckpt.latest_steps(args.ckpt_dir)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""DyverseController — the Edge Manager + Auto-scaler of the paper.
+
+Owns the tenant registry, the resource pool, and the Monitor; executes
+Procedure 1 (priority-ordered dynamic vertical scaling), Procedure 2
+(scale with eviction) and Procedure 3 (termination/migration) each round.
+
+The controller is actuator-agnostic: an Actuator receives quota changes
+and terminations. In the simulator the actuator adjusts the modelled
+service rate; in the serving engine it adjusts the scheduler's per-tenant
+slot/page quotas (control-plane only — no data movement, which is what
+keeps DYVERSE vertical scaling sub-second at 32+ tenants).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Protocol
+
+from repro.core.monitor import Monitor
+from repro.core.priority import POLICIES, priority_score
+from repro.core.quota import NodeCapacity, PoolError, ResourcePool
+from repro.core.types import (Decision, Quota, ResourceUnit, RoundAction,
+                              RoundReport, TenantSpec, TenantState, Weights)
+
+
+class Actuator(Protocol):
+    def apply_quota(self, tenant: str, quota: Quota) -> None: ...
+    def terminate(self, tenant: str) -> None: ...
+
+
+class NullActuator:
+    def apply_quota(self, tenant: str, quota: Quota) -> None: ...
+    def terminate(self, tenant: str) -> None: ...
+
+
+@dataclass
+class AdmissionResult:
+    admitted: bool
+    reason: str = ""
+
+
+class DyverseController:
+    def __init__(self, capacity: NodeCapacity,
+                 uR: ResourceUnit = ResourceUnit(),
+                 policy: str = "sdps",
+                 weights: Weights = Weights(),
+                 actuator: Actuator | None = None,
+                 default_units: int = 4,
+                 network_ok: Callable[[str], bool] | None = None,
+                 normalize_factors: bool = False):
+        if policy not in POLICIES and policy != "none":
+            raise ValueError(f"policy {policy!r} not in {POLICIES + ('none',)}")
+        self.pool = ResourcePool(capacity, uR)
+        self.monitor = Monitor()
+        self.policy = policy
+        self.weights = weights
+        self.actuator = actuator or NullActuator()
+        self.default_units = default_units
+        self.network_ok = network_ok or (lambda t: True)
+        self.normalize_factors = normalize_factors
+        self.registry: dict[str, TenantState] = {}
+        # Edge Manager's memory of tenants across launches (ageing/loyalty)
+        self._history: dict[str, dict[str, int]] = {}
+        self._next_ordinal = 1
+        self.rounds_run = 0
+
+    # ------------------------------------------------------------ admission
+    def admit(self, spec: TenantSpec, units: int | None = None) -> AdmissionResult:
+        """Edge Manager decision on hosting an offloaded server."""
+        units = units or self.default_units
+        hist = self._history.setdefault(spec.name, {"age": 0, "loyalty": 0})
+        if spec.name in self.registry:
+            return AdmissionResult(False, "already running")
+        try:
+            quota = self.pool.admit(spec.name, units)
+        except PoolError:
+            hist["age"] += 1  # Age_s: rejected by the node
+            return AdmissionResult(False, "insufficient resources")
+        st = TenantState(spec=spec, ordinal=self._next_ordinal, quota=quota,
+                         age=hist["age"], loyalty=hist["loyalty"])
+        self._next_ordinal += 1
+        hist["loyalty"] += 1  # Loyalty_s: used the service
+        self.registry[spec.name] = st
+        self.monitor.register(spec.name)
+        self.actuator.apply_quota(spec.name, quota)
+        return AdmissionResult(True)
+
+    # ------------------------------------------------------------ procedures
+    def update_priorities(self) -> float:
+        """Procedure 1, line 1. Returns wall-clock overhead (seconds)."""
+        t0 = time.perf_counter()
+        policy = self.policy if self.policy != "none" else "sps"
+        if self.normalize_factors and self.registry:
+            from repro.core.priority import batch_scores_normalized
+            from repro.core.types import PricingModel
+            names = list(self.registry)
+            sts = [self.registry[n] for n in names]
+            ms = [self.monitor.prev(n) for n in names]
+            scores = batch_scores_normalized(
+                policy,
+                [s.spec.premium for s in sts], [s.ordinal for s in sts],
+                [s.age for s in sts], [s.loyalty for s in sts],
+                [m.requests for m in ms], [m.users for m in ms],
+                [m.data_mb for m in ms], [s.reward_count for s in sts],
+                [s.scale_count for s in sts],
+                [s.spec.pricing == PricingModel.PFP for s in sts],
+                self.weights)
+            for n, sc in zip(names, scores):
+                self.registry[n].priority = float(sc)
+        else:
+            for name, st in self.registry.items():
+                m = self.monitor.prev(name)
+                st.priority = priority_score(policy, st, m.requests, m.users,
+                                             m.data_mb, self.weights)
+        return time.perf_counter() - t0
+
+    def run_round(self) -> RoundReport:
+        """Procedure 1: one dynamic vertical scaling round, O(N)."""
+        report = RoundReport(policy=self.policy)
+        metrics = self.monitor.roll_round()
+        if self.policy == "none":  # no dynamic vertical scaling (baseline)
+            return report
+        report.priority_update_s = self.update_priorities()
+
+        t0 = time.perf_counter()
+        order = sorted(self.registry, key=lambda n: self.registry[n].priority,
+                       reverse=True)
+        for name in order:
+            if name not in self.registry:       # evicted earlier this round
+                continue
+            st = self.registry[name]
+            m = metrics.get(name)
+            if m is None:
+                continue
+            if not st.active or not self.network_ok(name):
+                self._terminate(name, report, reason="network/inactive")
+                continue
+            L = st.spec.slo_latency
+            aL = m.avg_latency
+            if m.requests and aL > L:
+                st.last_vr = m.violation_rate
+                self._scale_up(name, st, m.violation_rate, report)
+            elif m.requests and aL > st.spec.down_threshold * L:
+                if st.spec.donation:
+                    self._scale_down(name, st, report, donated=True)
+                else:
+                    report.actions.append(RoundAction(name, Decision.NONE,
+                                                      priority=st.priority))
+            else:
+                self._scale_down(name, st, report, donated=False)
+        report.scaling_s = time.perf_counter() - t0
+        self.rounds_run += 1
+        self.pool.check_invariants()
+        return report
+
+    def _scale_up(self, name: str, st: TenantState, vr: float,
+                  report: RoundReport) -> None:
+        """Procedure 2, scaleup branch: aR_s = R_s · VR_s (≥1 unit)."""
+        r_units = self.pool.units(name)
+        want = max(1, round(r_units * vr))
+        freed_for: str | None = None
+        while self.pool.free_units < want:
+            victim = self._lowest_priority_victim(exclude=name)
+            # paper Procedure 2 line 10: stop at "index of s" — only tenants
+            # with strictly lower priority may be evicted
+            if victim is None or \
+                    self.registry[victim].priority >= st.priority:
+                break
+            self._terminate(victim, report, reason=f"evicted for {name}")
+            freed_for = victim
+        grant = min(want, self.pool.free_units)
+        if grant > 0:
+            self.pool.grow(name, grant)
+            st.quota = self.pool.quota(name)
+            st.scale_count += 1              # Scale_s penalty accounting
+            self.actuator.apply_quota(name, st.quota)
+        report.actions.append(RoundAction(name, Decision.SCALE_UP, grant,
+                                          st.priority, terminated_for=freed_for))
+
+    def _scale_down(self, name: str, st: TenantState, report: RoundReport,
+                    *, donated: bool) -> None:
+        """Procedure 2, scaledown branch: remove one uR (never below floor)."""
+        if self.pool.units(name) <= st.spec.min_units:
+            report.actions.append(RoundAction(name, Decision.NONE,
+                                              priority=st.priority))
+            return
+        self.pool.shrink(name, 1)
+        st.quota = self.pool.quota(name)
+        if donated:
+            st.reward_count += 1             # Reward_s credit; donation scaling is NOT penalised
+        else:
+            st.scale_count += 1              # Scale_s penalty accounting
+        self.actuator.apply_quota(name, st.quota)
+        report.actions.append(RoundAction(name, Decision.SCALE_DOWN, 1,
+                                          st.priority))
+
+    def _lowest_priority_victim(self, exclude: str) -> str | None:
+        cands = [(st.priority, n) for n, st in self.registry.items()
+                 if n != exclude]
+        if not cands:
+            return None
+        return min(cands)[1]
+
+    def _terminate(self, name: str, report: RoundReport, reason: str) -> None:
+        """Procedure 3: migrate users/state to the Cloud, destroy tenant."""
+        self.actuator.terminate(name)        # engine flushes KV, redirects users
+        self.pool.release(name)
+        self.monitor.forget(name)
+        self.registry.pop(name, None)
+        hist = self._history.setdefault(name, {"age": 0, "loyalty": 0})
+        hist["age"] += 1                     # future re-admission gets priority
+        report.terminated.append(name)
+        report.actions.append(RoundAction(name, Decision.TERMINATE))
+
+    # ------------------------------------------------------------ views
+    @property
+    def node_violation_rate(self) -> float:
+        return self.monitor.node_violation_rate
+
+    def snapshot(self) -> dict[str, dict]:
+        return {n: {"units": self.pool.units(n), "priority": st.priority,
+                    "scale_count": st.scale_count, "reward": st.reward_count}
+                for n, st in self.registry.items()}

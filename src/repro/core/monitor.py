@@ -1,0 +1,104 @@
+"""Monitor (paper §2): per-tenant metrics feeding priority + scaling.
+
+Tracks, per tenant and per scaling round: request count, users serviced,
+data transferred, latency samples vs the SLO (→ aL_s, VR_s), plus the
+cumulative reward/scale/age/loyalty counters that live in TenantState.
+
+The paper notes (Fig. 2a discussion) that DPM overhead depends on whether
+workload metrics are maintained in-band (FD) or re-read from logs
+(iPokeMon). This Monitor is in-band: O(1) per request, O(N) per round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class RoundMetrics:
+    """One tenant's metrics within the current scaling round."""
+
+    requests: int = 0                 # Request_s
+    users: int = 0                    # |U_s| observed
+    data_mb: float = 0.0              # Data_s
+    lat_sum: float = 0.0
+    violations: int = 0               # requests with latency > L_s
+
+    @property
+    def avg_latency(self) -> float:   # aL_s
+        return self.lat_sum / self.requests if self.requests else 0.0
+
+    @property
+    def violation_rate(self) -> float:  # VR_s
+        return self.violations / self.requests if self.requests else 0.0
+
+
+class Monitor:
+    def __init__(self) -> None:
+        self._cur: dict[str, RoundMetrics] = {}
+        self._prev: dict[str, RoundMetrics] = {}
+        # node-wide Eq. 1 accounting (never reset)
+        self.total_requests = 0
+        self.total_violations = 0
+
+    def register(self, tenant: str) -> None:
+        self._cur.setdefault(tenant, RoundMetrics())
+        self._prev.setdefault(tenant, RoundMetrics())
+
+    def forget(self, tenant: str) -> None:
+        self._cur.pop(tenant, None)
+        self._prev.pop(tenant, None)
+
+    def record_request(self, tenant: str, latency: float, slo: float,
+                       data_mb: float = 0.0, user: int | None = None) -> None:
+        m = self._cur.setdefault(tenant, RoundMetrics())
+        m.requests += 1
+        m.lat_sum += latency
+        m.data_mb += data_mb
+        if user is not None:
+            m.users = max(m.users, user)
+        violated = latency > slo
+        if violated:
+            m.violations += 1
+        self.total_requests += 1
+        self.total_violations += int(violated)
+
+    def record_batch(self, tenant: str, latencies, slo: float,
+                     data_mb: float = 0.0) -> int:
+        """Vectorised request recording (simulator fast-path). Returns the
+        number of violations in the batch."""
+        import numpy as np
+
+        lat = np.asarray(latencies, np.float64)
+        m = self._cur.setdefault(tenant, RoundMetrics())
+        n = int(lat.size)
+        viol = int((lat > slo).sum())
+        m.requests += n
+        m.lat_sum += float(lat.sum())
+        m.data_mb += data_mb
+        m.violations += viol
+        self.total_requests += n
+        self.total_violations += viol
+        return viol
+
+    def set_users(self, tenant: str, users: int) -> None:
+        self._cur.setdefault(tenant, RoundMetrics()).users = users
+
+    # ---- round boundary -------------------------------------------------
+    def roll_round(self) -> dict[str, RoundMetrics]:
+        """Close the current round; its metrics become the 'previous round'
+        values consumed by DPM and by Procedure 1's VR_s."""
+        self._prev = self._cur
+        self._cur = {t: RoundMetrics() for t in self._prev}
+        return self._prev
+
+    def prev(self, tenant: str) -> RoundMetrics:
+        return self._prev.get(tenant, RoundMetrics())
+
+    def current(self, tenant: str) -> RoundMetrics:
+        return self._cur.get(tenant, RoundMetrics())
+
+    @property
+    def node_violation_rate(self) -> float:
+        """Eq. 1: VR_e over all tenants and all time."""
+        return (self.total_violations / self.total_requests
+                if self.total_requests else 0.0)

@@ -1,0 +1,137 @@
+"""Priority management (paper §3): SPM baseline + three DPM approaches.
+
+Scalar forms follow Eqs. 2–6 exactly (weights all 1.0 per §5 Setup).
+A vectorised jnp scorer is provided for large tenant counts — the paper's
+"lightweight" claim hinges on O(N) rounds; the vector form makes the
+score update a handful of fused vector ops on-device if desired.
+
+Reciprocal terms: Eq. 4 and Eq. 6 divide by workload/scale factors. The
+paper leaves x=0 undefined; we use 1/(W·max(x,1)) so a never-scaled
+server receives the maximum bonus rather than an infinity.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import PricingModel, TenantState, Weights
+
+POLICIES = ("sps", "wdps", "cdps", "sdps")
+
+
+def _recip(w: float, x: float) -> float:
+    return 1.0 / (w * max(x, 1.0))
+
+
+def sps(state: TenantState, w: Weights = Weights()) -> float:
+    """Eq. 2: static priority — premium, FCFS, ageing, loyalty."""
+    return (w.W_P * state.spec.premium
+            + w.W_ID / max(state.ordinal, 1)
+            + w.W_Age * state.age
+            + w.W_Loyalty * state.loyalty)
+
+
+def wdps(state: TenantState, requests: float, users: float, data_mb: float,
+         w: Weights = Weights()) -> float:
+    """Eq. 3 (PFR/Hybrid: additive) / Eq. 4 (PFP: reciprocal penalty)."""
+    base = sps(state, w)
+    if state.spec.pricing in (PricingModel.PFR, PricingModel.HYBRID):
+        return (base + w.W_Request * requests + w.W_U * users
+                + w.W_Data * data_mb)
+    return (base + _recip(w.W_Request, requests) + _recip(w.W_U, users)
+            + _recip(w.W_Data, data_mb))
+
+
+def cdps(state: TenantState, requests: float, users: float, data_mb: float,
+         w: Weights = Weights()) -> float:
+    """Eq. 5: community-aware — reward donated resources."""
+    return wdps(state, requests, users, data_mb, w) + w.W_Reward * state.reward_count
+
+
+def sdps(state: TenantState, requests: float, users: float, data_mb: float,
+         w: Weights = Weights()) -> float:
+    """Eq. 6: system-aware — penalise frequent scalers (reciprocal bonus
+    shrinks as Scale_s grows)."""
+    return (cdps(state, requests, users, data_mb, w)
+            + _recip(w.W_Scale, state.scale_count))
+
+
+def priority_score(policy: str, state: TenantState, requests: float,
+                   users: float, data_mb: float, w: Weights = Weights()) -> float:
+    if policy == "sps":
+        return sps(state, w)
+    if policy == "wdps":
+        return wdps(state, requests, users, data_mb, w)
+    if policy == "cdps":
+        return cdps(state, requests, users, data_mb, w)
+    if policy == "sdps":
+        return sdps(state, requests, users, data_mb, w)
+    raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+
+
+# ---------------------------------------------------------------- vectorised
+def batch_scores(policy: str, premium, ordinal, age, loyalty, requests, users,
+                 data_mb, reward, scale_count, pfp_mask,
+                 w: Weights = Weights()):
+    """Vectorised scorer over N tenants (jnp arrays). Semantics identical
+    to the scalar form; used by the overhead benchmark at large N."""
+    premium = jnp.asarray(premium, jnp.float32)
+    base = (w.W_P * premium
+            + w.W_ID / jnp.maximum(jnp.asarray(ordinal, jnp.float32), 1.0)
+            + w.W_Age * jnp.asarray(age, jnp.float32)
+            + w.W_Loyalty * jnp.asarray(loyalty, jnp.float32))
+    if policy == "sps":
+        return base
+    req = jnp.asarray(requests, jnp.float32)
+    usr = jnp.asarray(users, jnp.float32)
+    dat = jnp.asarray(data_mb, jnp.float32)
+    add = w.W_Request * req + w.W_U * usr + w.W_Data * dat
+    rec = (1.0 / (w.W_Request * jnp.maximum(req, 1.0))
+           + 1.0 / (w.W_U * jnp.maximum(usr, 1.0))
+           + 1.0 / (w.W_Data * jnp.maximum(dat, 1.0)))
+    score = base + jnp.where(jnp.asarray(pfp_mask, bool), rec, add)
+    if policy == "wdps":
+        return score
+    score = score + w.W_Reward * jnp.asarray(reward, jnp.float32)
+    if policy == "cdps":
+        return score
+    return score + 1.0 / (w.W_Scale * jnp.maximum(jnp.asarray(scale_count, jnp.float32), 1.0))
+
+
+# ---------------------------------------------------------------- normalized
+def batch_scores_normalized(policy: str, premium, ordinal, age, loyalty,
+                            requests, users, data_mb, reward, scale_count,
+                            pfp_mask, w: Weights = Weights()):
+    """BEYOND-PAPER: max-normalised factors.
+
+    With the paper's all-equal weights, Request_s (~10³) numerically swamps
+    the reward (≤ a few) and 1/Scale_s (≤ 1) terms, so cDPS/sDPS degenerate
+    to wDPS — which the paper itself observes ("different approaches did
+    not affect the overall violation rate", §5.1.2). The paper's stated
+    future work is weighting the factors; here every factor is normalised
+    to [0,1] across tenants before the linear combination, which makes the
+    community/system terms mechanically comparable to the workload terms.
+    """
+    import numpy as np
+
+    def norm(x):
+        x = np.asarray(x, np.float64)
+        m = x.max()
+        return x / m if m > 0 else x
+
+    base = (w.W_P * norm(premium) + w.W_ID * norm(1.0 / np.maximum(ordinal, 1))
+            + w.W_Age * norm(age) + w.W_Loyalty * norm(loyalty))
+    if policy == "sps":
+        return base
+    workload = (w.W_Request * norm(requests) + w.W_U * norm(users)
+                + w.W_Data * norm(data_mb))
+    pfp = np.asarray(pfp_mask, bool)
+    n_work = 3.0 - workload  # reciprocal analogue in normalised space
+    score = base + np.where(pfp, n_work, workload)
+    if policy == "wdps":
+        return score
+    score = score + w.W_Reward * norm(reward)
+    if policy == "cdps":
+        return score
+    inv_scale = 1.0 / np.maximum(np.asarray(scale_count, np.float64), 1.0)
+    return score + w.W_Scale * norm(inv_scale)

@@ -1,0 +1,86 @@
+"""Resource pool accounting: FR (free resources) + per-tenant quotas.
+
+Invariants (property-tested):
+  * Σ_s R_s + FR == node capacity, always, on both dimensions;
+  * no quota goes negative;
+  * alloc beyond FR raises (the auto-scaler must evict first — Procedure 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.types import Quota, ResourceUnit
+
+
+class PoolError(RuntimeError):
+    pass
+
+
+@dataclass
+class NodeCapacity:
+    slots: int
+    pages: int
+
+
+class ResourcePool:
+    def __init__(self, capacity: NodeCapacity, uR: ResourceUnit = ResourceUnit()):
+        self.capacity = capacity
+        self.uR = uR
+        self._alloc: dict[str, Quota] = {}
+
+    # ---- views
+    @property
+    def free(self) -> Quota:
+        """FR."""
+        used_s = sum(q.slots for q in self._alloc.values())
+        used_p = sum(q.pages for q in self._alloc.values())
+        return Quota(self.capacity.slots - used_s, self.capacity.pages - used_p)
+
+    @property
+    def free_units(self) -> int:
+        return self.free.units(self.uR)
+
+    def quota(self, tenant: str) -> Quota:
+        return self._alloc[tenant]
+
+    def units(self, tenant: str) -> int:
+        return self._alloc[tenant].units(self.uR)
+
+    def tenants(self) -> list[str]:
+        return list(self._alloc)
+
+    # ---- mutations
+    def admit(self, tenant: str, units: int) -> Quota:
+        if tenant in self._alloc:
+            raise PoolError(f"{tenant} already allocated")
+        q = Quota(0, 0).add_units(units, self.uR)
+        f = self.free
+        if q.slots > f.slots or q.pages > f.pages:
+            raise PoolError(f"admit {tenant}: need {q}, free {f}")
+        self._alloc[tenant] = q
+        return q.copy()
+
+    def grow(self, tenant: str, units: int) -> Quota:
+        q = self._alloc[tenant]
+        add = Quota(0, 0).add_units(units, self.uR)
+        f = self.free
+        if add.slots > f.slots or add.pages > f.pages:
+            raise PoolError(f"grow {tenant} by {units}u: need {add}, free {f}")
+        self._alloc[tenant] = Quota(q.slots + add.slots, q.pages + add.pages)
+        return self._alloc[tenant].copy()
+
+    def shrink(self, tenant: str, units: int) -> Quota:
+        q = self._alloc[tenant]
+        self._alloc[tenant] = q.sub_units(units, self.uR)
+        return self._alloc[tenant].copy()
+
+    def release(self, tenant: str) -> Quota:
+        return self._alloc.pop(tenant)
+
+    def check_invariants(self) -> None:
+        f = self.free
+        if f.slots < 0 or f.pages < 0:
+            raise PoolError(f"overcommitted: free {f}")
+        for t, q in self._alloc.items():
+            if q.slots < 0 or q.pages < 0:
+                raise PoolError(f"negative quota for {t}: {q}")

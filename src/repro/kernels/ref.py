@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window: int = 0):
+    """q (B,H,Sq,D); k/v (B,KH,Sk,D) → (B,H,Sq,D). O(S²) math in f32."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, Sq, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths):
+    """Gather pages densely, run masked decode attention (f32)."""
+    B, H, D = q.shape
+    KH, P, page, _ = k_pool.shape
+    G = H // KH
+    k = k_pool[:, page_table]                      # (KH, B, mp, page, D)
+    v = v_pool[:, page_table]
+    mp = page_table.shape[1]
+    k = k.transpose(1, 0, 2, 3, 4).reshape(B, KH, mp * page, D)
+    v = v.transpose(1, 0, 2, 3, 4).reshape(B, KH, mp * page, D)
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32))
+    valid = jnp.arange(mp * page)[None] < lengths[:, None]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, w, u, init_state=None):
+    """Per-step scan oracle. r/k/v/w (B,H,T,K); u (H,K)."""
+    B, H, T, K = r.shape
+    s0 = (jnp.zeros((B, H, K, K), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = [x.astype(jnp.float32) for x in inp]  # (B,H,K)
+        kv = kt[..., None] * vt[..., None, :]
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, ot
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (r, k, v, w))
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    return o.transpose(1, 2, 0, 3).astype(r.dtype), s_fin
+
+
+def ssd_ref(x, dt, a_log, Bm, Cm, init_state=None):
+    """Per-step scan oracle. x (B,H,T,P); dt (B,H,T); Bm/Cm (B,T,N)."""
+    B, H, T, P = x.shape
+    N = Bm.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp                           # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt.astype(jnp.float32) * a[None])
+        upd = jnp.einsum("bhp,bn->bhpn",
+                         xt.astype(jnp.float32) * dtt[..., None], bt.astype(jnp.float32))
+        s = s * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", s, ct.astype(jnp.float32))
+        return s, yt
+
+    xs = (x.transpose(2, 0, 1, 3), dt.transpose(2, 0, 1),
+          Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    s_fin, y = jax.lax.scan(step, s0, xs)
+    return y.transpose(1, 2, 0, 3).astype(x.dtype), s_fin

@@ -1,0 +1,119 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 20 --seq 64 --batch 8 --reduced --ckpt-dir /tmp/ck
+
+On a real pod (jax.distributed initialised by the cluster runtime) this
+same entry point shards the full config over make_production_mesh(); on
+this CPU container use --reduced for a runnable demonstration. Features:
+pjit sharding, ZeRO-1 optimizer sharding, microbatching, async
+checkpointing + resume, straggler deadline logging, DYVERSE-style
+degraded-mode (halve the batch on repeated deadline misses — load
+shedding borrowed from the paper's eviction idea).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.data.pipeline import make_pipeline
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.specs import input_pspecs, state_pspecs
+from repro.models import build_model
+from repro.parallel.sharding import use_mesh
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import OptState
+from repro.training.train_step import (TrainState, init_train_state,
+                                       make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config (full config needs a pod)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use make_production_mesh() (needs 256+ devices)")
+    ap.add_argument("--step-deadline-s", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    tc = TrainConfig(microbatches=args.microbatches,
+                     grad_compression=args.grad_compression,
+                     total_steps=max(args.steps, 10),
+                     step_deadline_s=args.step_deadline_s)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    pipe = make_pipeline(cfg, shape, seed=0)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+
+    with use_mesh(mesh):
+        params_sds = jax.eval_shape(model.init_params, jax.random.key(0))
+        p_specs, z_specs = state_pspecs(params_sds, None, mesh, zero1=tc.zero1)
+        state_spec = TrainState(params=p_specs,
+                                opt=OptState(step=P(), m=z_specs, v=z_specs))
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_spec,
+                                is_leaf=lambda x: isinstance(x, P))
+        step_fn = jax.jit(make_train_step(model, tc),
+                          out_shardings=(state_sh, None),
+                          donate_argnums=(0,))
+
+        state = init_train_state(model, jax.random.key(0))
+        state = jax.device_put(state, state_sh)
+        start = 0
+        if args.resume and args.ckpt_dir and ckpt.latest_steps(args.ckpt_dir):
+            start, state = ckpt.restore(args.ckpt_dir, state,
+                                        shardings=state_sh)
+            print(f"resumed from step {start}")
+
+        writer = None
+        misses = 0
+        batch_scale = 1
+        for i in range(start, args.steps):
+            t0 = time.perf_counter()
+            batch = pipe.batch(i)
+            if batch_scale > 1:  # degraded mode: shed load
+                batch = jax.tree.map(lambda x: x[: x.shape[0] // batch_scale],
+                                     batch)
+            state, metrics = step_fn(state, batch)
+            dt = time.perf_counter() - t0
+            if tc.step_deadline_s and dt > tc.step_deadline_s:
+                misses += 1
+                print(f"step {i}: DEADLINE MISS ({dt:.2f}s > "
+                      f"{tc.step_deadline_s}s) [{misses}/3]")
+                if misses >= 3 and batch_scale == 1:
+                    batch_scale = 2
+                    print("degraded mode: halving per-step batch "
+                          "(straggler mitigation)")
+            print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} {dt * 1e3:.0f}ms")
+            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                writer = ckpt.save(args.ckpt_dir, i + 1, state, async_=True)
+        if args.ckpt_dir:
+            w = ckpt.save(args.ckpt_dir, args.steps, state, async_=True)
+            w.join()
+            print(f"final checkpoint at step {args.steps}: "
+                  f"{ckpt.latest_steps(args.ckpt_dir)}")
+        if writer:
+            writer.join()
+
+
+if __name__ == "__main__":
+    main()

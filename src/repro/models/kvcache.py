@@ -1,0 +1,145 @@
+"""KV caches.
+
+Two worlds:
+  * dense per-layer caches (stacked over layers) used by train/dry-run
+    decode steps — contiguous (L, B, Smax, KH, hd) arrays;
+  * a paged KV pool used by the multi-tenant serving engine — HBM is
+    carved into fixed-size pages; tenants own page quotas that DYVERSE
+    vertically scales at runtime (the TPU analogue of cgroup memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------- dense
+def dense_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked (L, B, S, KH, hd) k/v shapes for scan-over-layers decode."""
+    L = cfg.num_layers
+    S = min(max_len, cfg.window) if cfg.attention == "swa" else max_len
+    return (L, batch, S, cfg.num_kv_heads, cfg.head_dim)
+
+
+def init_dense_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = dense_cache_shape(cfg, batch, max_len)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def write_slot(cache_layer, k_new, v_new, slot):
+    """cache_layer: (k,v) each (B, S, KH, hd); k_new/v_new (B, 1, KH, hd);
+    slot (B,) int32 — scatter the new token's K/V into its slot."""
+    k_cache, v_cache = cache_layer
+    b = jnp.arange(k_cache.shape[0])
+    k_cache = k_cache.at[b, slot].set(k_new[:, 0])
+    v_cache = v_cache.at[b, slot].set(v_new[:, 0])
+    return k_cache, v_cache
+
+
+def grow_cache(cfg: ModelConfig, cache, max_len: int):
+    """Pad a prefill-produced cache along its sequence axis to max_len so
+    decode steps have free slots (engine/example helper)."""
+    import jax.numpy as jnp
+
+    if cfg.family in ("dense", "moe", "encdec"):
+        target = min(max_len, cfg.window) if cfg.attention == "swa" else max_len
+        pad = target - cache["k"].shape[2]
+        if pad > 0:
+            pw = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+            cache = dict(cache, k=jnp.pad(cache["k"], pw),
+                         v=jnp.pad(cache["v"], pw))
+        return cache
+    if cfg.family == "hybrid":
+        pad = max_len - cache["attn_k"].shape[2]
+        if pad > 0:
+            pw = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+            cache = dict(cache, attn_k=jnp.pad(cache["attn_k"], pw),
+                         attn_v=jnp.pad(cache["attn_v"], pw))
+        return cache
+    return cache  # rwkv6: fixed-size state
+
+
+# ---------------------------------------------------------------- paged
+@dataclass
+class PagedPoolConfig:
+    num_pages: int            # total pages in the HBM pool (the contended resource)
+    page_size: int            # tokens per page
+    num_kv_heads: int
+    head_dim: int
+    num_layers: int
+    dtype: str = "bfloat16"
+
+    @property
+    def bytes_per_page(self) -> int:
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return (2 * self.num_layers * self.page_size * self.num_kv_heads
+                * self.head_dim * itemsize)
+
+
+class PagedKVPool:
+    """A fixed pool of KV pages + free-list. Page ownership is tracked per
+    tenant so DYVERSE can account/reclaim. Data plane arrays are jnp;
+    the free-list/ownership control plane is host-side (NumPy) — scaling
+    decisions are control-plane-only, matching the paper's design point
+    that vertical scaling must be cheap (no data movement on quota change).
+    """
+
+    def __init__(self, cfg: PagedPoolConfig):
+        self.cfg = cfg
+        shape = (cfg.num_layers, cfg.num_pages, cfg.page_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+        self.v = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+        self._free: list[int] = list(range(cfg.num_pages))
+        self._owner: dict[int, str] = {}
+
+    # ---- control plane
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_owned(self, tenant: str) -> int:
+        return sum(1 for t in self._owner.values() if t == tenant)
+
+    def alloc(self, tenant: str, n: int) -> list[int]:
+        if n > len(self._free):
+            raise MemoryError(f"pool exhausted: want {n}, free {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        for pg in pages:
+            self._owner[pg] = tenant
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for pg in pages:
+            self._owner.pop(pg, None)
+            self._free.append(pg)
+
+    def release_tenant(self, tenant: str) -> int:
+        pages = [pg for pg, t in self._owner.items() if t == tenant]
+        self.free(pages)
+        return len(pages)
+
+    # ---- data plane
+    def write(self, layer: int, page: int, offset: int, k_tok, v_tok) -> None:
+        self.k = self.k.at[layer, page, offset].set(k_tok)
+        self.v = self.v.at[layer, page, offset].set(v_tok)
+
+
+def gather_pages(pool_k, pool_v, page_table):
+    """pool_{k,v}: (L, P, page, KH, hd); page_table (B, max_pages) int32
+    (padded with 0; validity via length elsewhere). Returns contiguous
+    (L, B, max_pages*page, KH, hd) views for decode attention — the
+    pure-JAX analogue of the Pallas ``paged_attention`` kernel's gather.
+    """
+    L, P, page, KH, hd = pool_k.shape
+    k = pool_k[:, page_table]          # (L, B, max_pages, page, KH, hd)
+    v = pool_v[:, page_table]
+    B, mp = page_table.shape
+    return (k.reshape(L, B, mp * page, KH, hd),
+            v.reshape(L, B, mp * page, KH, hd))

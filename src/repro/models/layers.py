@@ -1,0 +1,154 @@
+"""Shared neural-net layers: norms, RoPE, GLU MLPs, embeddings.
+
+Functional style: params are nested dicts of jnp arrays; every layer is a
+pure function ``f(params, x, cfg)``. Params live in ``param_dtype``
+(f32); compute runs in ``cfg.dtype`` (bf16) with f32 norms/softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------- init
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = (1.0 / in_dim) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dt)
+
+
+def group_norm_heads(x, scale, bias, eps: float = 64e-5):
+    """Per-head LayerNorm used by RWKV6 (x: ..., H, K)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_params(cfg: ModelConfig, dim: int | None = None):
+    dim = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.zeros((dim,), pdtype(cfg)),
+                "bias": jnp.zeros((dim,), pdtype(cfg))}
+    return {"scale": jnp.zeros((dim,), pdtype(cfg))}
+
+
+def apply_norm(params, x, cfg: ModelConfig):
+    if "bias" in params:
+        return layer_norm(x, params["scale"], params["bias"])
+    return rms_norm(x, params["scale"])
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: int (..., S) → cos/sin (..., S, head_dim//2) in f32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half)
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def glu_mlp_params(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    return {
+        "w_gate": dense_init(k1, cfg.d_model, d_ff, dt),
+        "w_up": dense_init(k2, cfg.d_model, d_ff, dt),
+        "w_down": dense_init(k3, d_ff, cfg.d_model, dt),
+    }
+
+
+def glu_mlp(params, x, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    g = x @ params["w_gate"].astype(dt)
+    u = x @ params["w_up"].astype(dt)
+    return (act_fn(cfg.act)(g) * u) @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------- embed/unembed
+def embedding_params(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"embed": embed_init(k1, cfg.padded_vocab, cfg.d_model, pdtype(cfg))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, cfg.d_model, cfg.padded_vocab, pdtype(cfg), scale=0.02)
+    return p
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    return params["embed"].astype(cdtype(cfg))[tokens]
+
+
+def unembed(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(cdtype(cfg)).T
+    else:
+        w = params["unembed"].astype(cdtype(cfg))
+    return (x @ w).astype(jnp.float32)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits (..., V) f32, labels int (...). Returns (mean_loss, n_tokens)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / total, total

@@ -1,0 +1,181 @@
+"""Mamba-2 / SSD blocks [arXiv:2405.21060], chunked state-space dual form.
+
+Per head h (P channels, N state): with per-step log-decay a_t = -exp(A_log)·dt_t,
+  h_t = exp(a_t)·h_{t-1} + dt_t · x_t ⊗ B_t,    y_t = C_t·h_t + D·x_t
+The chunked algorithm computes intra-chunk contributions with a causal
+(L×L) decay matrix and passes inter-chunk state through a scan — the
+pure-JAX analogue of the ``repro.kernels.ssd`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype, dense_init, pdtype, rms_norm
+
+CHUNK = 128
+
+
+def mamba2_params(key, cfg: ModelConfig):
+    D = cfg.d_model
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.conv_width
+    conv_ch = di + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    return {
+        "in_proj": dense_init(k1, D, 2 * di + 2 * N + H, dt),
+        "conv_w": (jax.random.normal(k2, (W, conv_ch)) * (1.0 / W) ** 0.5).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32) * 0.5 + 0.5).astype(dt),
+        "d_skip": jnp.ones((H,), dt),
+        "dt_bias": jnp.zeros((H,), dt),
+        "norm_scale": jnp.zeros((di,), dt),
+        "out_proj": dense_init(k3, di, D, dt),
+    }
+
+
+def _split_in(p, x, cfg: ModelConfig):
+    """x (B,S,D) → z (B,S,di), xBC (B,S,di+2N), dt (B,S,H)."""
+    dt_ = cdtype(cfg)
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: 2 * di + 2 * N]
+    dt_raw = zxbcdt[..., 2 * di + 2 * N:]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(p, xBC, cfg: ModelConfig, conv_state=None):
+    """Depthwise causal conv1d (width W). conv_state (B, W-1, C) carries
+    the last W-1 inputs. Returns (out, new_conv_state)."""
+    W = cfg.conv_width
+    B = xBC.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, xBC.shape[-1]), xBC.dtype)
+    xp = jnp.concatenate([conv_state, xBC], axis=1)
+    w = p["conv_w"].astype(xBC.dtype)
+    out = sum(xp[:, i: i + xBC.shape[1]] * w[i] for i in range(W))
+    out = jax.nn.silu(out + p["conv_b"].astype(xBC.dtype))
+    return out, xp[:, -(W - 1):]
+
+
+def ssd_chunked(xh, dt, a_log, Bm, Cm, *, chunk=CHUNK, init_state=None):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P); dt (B,S,H) f32 post-softplus; a_log (H,);
+    Bm/Cm (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N) f32).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"seq {S} not a multiple of chunk {chunk}"
+    nc = S // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                     # (H,) < 0
+    da = dt * a[None, None, :]                                  # (B,S,H) ≤ 0
+    xw = xh.astype(jnp.float32) * dt[..., None]                 # dt-weighted input
+
+    xc = xw.reshape(Bsz, nc, chunk, H, P)
+    dac = da.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    cum = jnp.cumsum(dac, axis=2)                               # (B,nc,L,H)
+
+    # --- intra-chunk: y[i] = Σ_{j≤i} exp(cum_i - cum_j)·(C_i·B_j)·x̃_j
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                  # (B,nc,L,L)
+    dmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,i,j,H)
+    i_idx = jnp.arange(chunk)
+    causal = (i_idx[:, None] >= i_idx[None, :])
+    dmat = jnp.where(causal[None, None, :, :, None], dmat, -jnp.inf)
+    M = CB[..., None] * jnp.exp(dmat)                           # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # --- chunk summaries: S_c = Σ_j exp(cum_L - cum_j)·B_j ⊗ x̃_j
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)                  # (B,nc,L,H)
+    S_c = jnp.einsum("bcln,bclhp,bclh->bchpn", Bc, xc, dec_end)
+    chunk_dec = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H)
+
+    # --- inter-chunk scan
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        sc, cd = inp                                            # (B,H,P,N), (B,H)
+        s_prev = s
+        s_new = s * cd[:, :, None, None] + sc
+        return s_new, s_prev
+
+    s_fin, s_prevs = jax.lax.scan(step, s0, (S_c.swapaxes(0, 1), chunk_dec.swapaxes(0, 1)))
+    s_prevs = s_prevs.swapaxes(0, 1)                            # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cc, jnp.exp(cum), s_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype), s_fin
+
+
+def ssd_reference(xh, dt, a_log, Bm, Cm, init_state=None):
+    """Per-step scan oracle (tests only)."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a[None])                          # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt.astype(jnp.float32) * dtt[..., None], bt)
+        s_new = s * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", s_new, ct)
+        return s_new, yt
+
+    xs = (xh.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bm.astype(jnp.float32).swapaxes(0, 1), Cm.astype(jnp.float32).swapaxes(0, 1))
+    s_fin, y = jax.lax.scan(step, s0, xs)
+    return y.swapaxes(0, 1).astype(xh.dtype), s_fin
+
+
+def mamba2_block(p, x, cfg: ModelConfig, state=None):
+    """x (B,S,D); state = (conv_state, ssm_state) or None.
+    Returns (out (B,S,D), new_state)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B_, S, _ = x.shape
+    conv_state = None if state is None else state[0]
+    ssm_state = None if state is None else state[1]
+    z, xBC, dt_raw = _split_in(p, x, cfg)
+    xBC, conv_state = _causal_conv(p, xBC, cfg, conv_state)
+    xs = xBC[..., :di].reshape(B_, S, H, P)
+    Bm = xBC[..., di: di + N]
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    y, ssm_state = ssd_chunked(xs, dt, p["a_log"], Bm, Cm, init_state=ssm_state)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(B_, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ p["out_proj"].astype(cdtype(cfg))
+    return out, (conv_state, ssm_state)
+
+
+def mamba2_step(p, x, cfg: ModelConfig, state):
+    """Single-token decode. x (B,D); state (conv_state, ssm_state)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B_ = x.shape[0]
+    conv_state, ssm_state = state
+    z, xBC, dt_raw = _split_in(p, x[:, None], cfg)
+    xBC, conv_state = _causal_conv(p, xBC, cfg, conv_state)
+    xs = xBC[:, 0, :di].reshape(B_, H, P)
+    Bm = xBC[:, 0, di: di + N]
+    Cm = xBC[:, 0, di + N:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None])                               # (B,H)
+    s = ssm_state.astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xs.astype(jnp.float32) * dt[..., None],
+                     Bm.astype(jnp.float32))
+    s = s * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", s, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + p["d_skip"].astype(y.dtype)[None, :, None] * xs
+    y = y.reshape(B_, di)
+    y = rms_norm(y * jax.nn.silu(z[:, 0]), p["norm_scale"])
+    out = y @ p["out_proj"].astype(cdtype(cfg))
+    return out, (conv_state, s)

@@ -1,0 +1,334 @@
+"""build_model(cfg) → Model: init / loss / prefill / decode / specs.
+
+One uniform functional surface over the five families so the launcher,
+dry-run, serving engine and tests never branch on architecture.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models import transformer as tfm
+from repro.models.kvcache import dense_cache_shape
+from repro.models.layers import (apply_norm, cdtype, cross_entropy, embed,
+                                 embedding_params, norm_params, pdtype,
+                                 dense_init, unembed)
+from repro.parallel.sharding import constrain
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[..., Any]
+    loss_fn: Callable[..., Any]          # (params, batch) -> (loss, metrics)
+    prefill_fn: Callable[..., Any]       # (params, batch) -> (last_logits, cache)
+    decode_fn: Callable[..., Any]        # (params, cache, token, pos) -> (logits, cache)
+    cache_specs: Callable[..., Any]      # (batch, max_len) -> pytree of SDS
+    input_specs: Callable[..., Any]      # (ShapeConfig) -> dict of SDS
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe"):
+        return _build_decoder(cfg)
+    if cfg.family == "rwkv6":
+        return _build_rwkv(cfg)
+    if cfg.family == "hybrid":
+        return _build_hybrid(cfg)
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# ---------------------------------------------------------------- shared bits
+def _inputs_to_embeds(params, batch, cfg: ModelConfig):
+    """tokens or precomputed frontend embeds → (B,S,D)."""
+    if "embeds" in batch:                      # vision stub (llava)
+        return batch["embeds"].astype(cdtype(cfg))
+    return embed(params["tok"], batch["tokens"], cfg)
+
+
+def _lm_loss(params, x, batch, cfg: ModelConfig, aux):
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = unembed(params["tok"], x, cfg)
+    mask = batch.get("mask")
+    loss, ntok = cross_entropy(logits, batch["labels"], mask)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux, "ntok": ntok}
+
+
+def _last_logits(params, x, cfg: ModelConfig):
+    x = apply_norm(params["ln_f"], x[:, -1:], cfg)
+    return unembed(params["tok"], x, cfg)[:, 0]
+
+
+def _token_specs(cfg, shape: ShapeConfig, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    d: dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        d["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        d["tokens"] = _sds((B, S), jnp.int32)
+    if with_labels:
+        d["labels"] = _sds((B, S), jnp.int32)
+    return d
+
+
+# ---------------------------------------------------------------- dense / moe
+def _build_decoder(cfg: ModelConfig) -> Model:
+    def init_params(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "tok": embedding_params(k1, cfg),
+            "layers": tfm._stack_init(k2, cfg.num_layers,
+                                      lambda k: tfm.block_params(k, cfg)),
+            "ln_f": norm_params(cfg),
+        }
+
+    def forward(params, batch, collect_cache):
+        x = _inputs_to_embeds(params, batch, cfg)
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        x, kv, aux = tfm.decoder_stack(params["layers"], x, cfg, positions,
+                                       collect_cache=collect_cache)
+        return x, kv, aux
+
+    def loss_fn(params, batch):
+        x, _, aux = forward(params, batch, collect_cache=False)
+        return _lm_loss(params, x, batch, cfg, aux)
+
+    def prefill_fn(params, batch):
+        x, kv, _ = forward(params, batch, collect_cache=True)
+        cache = None
+        if kv is not None:
+            k, v = kv
+            if cfg.attention == "swa" and k.shape[2] > cfg.window:
+                k = k[:, :, -cfg.window:]
+                v = v[:, :, -cfg.window:]
+            cache = {"k": k, "v": v}
+        return _last_logits(params, x, cfg), cache
+
+    def decode_fn(params, cache, token, pos):
+        x = embed(params["tok"], token[:, None], cfg)
+        x, cache = tfm.decode_step_stack(params["layers"], x, cfg, cache, pos)
+        logits = _last_logits(params, x, cfg)
+        return logits, cache
+
+    def cache_specs(batch, max_len):
+        shape = dense_cache_shape(cfg, batch, max_len)
+        return {"k": _sds(shape, jnp.bfloat16), "v": _sds(shape, jnp.bfloat16)}
+
+    def input_specs(shape: ShapeConfig):
+        if shape.kind == "train":
+            return _token_specs(cfg, shape, with_labels=True)
+        if shape.kind == "prefill":
+            return _token_specs(cfg, shape, with_labels=False)
+        B = shape.global_batch
+        return {"token": _sds((B,), jnp.int32), "pos": _sds((B,), jnp.int32),
+                "cache": cache_specs(B, shape.seq_len)}
+
+    return Model(cfg, init_params, loss_fn, prefill_fn, decode_fn,
+                 cache_specs, input_specs)
+
+
+# ---------------------------------------------------------------- rwkv6
+def _build_rwkv(cfg: ModelConfig) -> Model:
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_size
+
+    def init_params(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "tok": embedding_params(k1, cfg),
+            "layers": tfm._stack_init(k2, cfg.num_layers,
+                                      lambda k: tfm.rwkv_block_params(k, cfg)),
+            "ln_f": norm_params(cfg),
+        }
+
+    def loss_fn(params, batch):
+        x = _inputs_to_embeds(params, batch, cfg)
+        x, _ = tfm.rwkv_stack(params["layers"], x, cfg)
+        return _lm_loss(params, x, batch, cfg, jnp.zeros((), jnp.float32))
+
+    def prefill_fn(params, batch):
+        x = _inputs_to_embeds(params, batch, cfg)
+        x, states = tfm.rwkv_stack(params["layers"], x, cfg, collect_state=True)
+        return _last_logits(params, x, cfg), states
+
+    def decode_fn(params, cache, token, pos):
+        x = embed(params["tok"], token[:, None], cfg)[:, 0]
+        x, cache = tfm.rwkv_decode_step(params["layers"], x, cfg, cache)
+        x = apply_norm(params["ln_f"], x[:, None], cfg)
+        return unembed(params["tok"], x, cfg)[:, 0], cache
+
+    def cache_specs(batch, max_len):
+        L, D = cfg.num_layers, cfg.d_model
+        return {"att_x": _sds((L, batch, D), jnp.bfloat16),
+                "att_s": _sds((L, batch, H, K, K), jnp.float32),
+                "ffn_x": _sds((L, batch, D), jnp.bfloat16)}
+
+    def input_specs(shape: ShapeConfig):
+        if shape.kind in ("train", "prefill"):
+            return _token_specs(cfg, shape, with_labels=shape.kind == "train")
+        B = shape.global_batch
+        return {"token": _sds((B,), jnp.int32), "pos": _sds((B,), jnp.int32),
+                "cache": cache_specs(B, shape.seq_len)}
+
+    return Model(cfg, init_params, loss_fn, prefill_fn, decode_fn,
+                 cache_specs, input_specs)
+
+
+# ---------------------------------------------------------------- hybrid
+def _build_hybrid(cfg: ModelConfig) -> Model:
+    G = cfg.num_layers // cfg.attn_every
+
+    def init_params(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "tok": embedding_params(k1, cfg),
+            "blocks": tfm.hybrid_params(k2, cfg),
+            "ln_f": norm_params(cfg),
+        }
+
+    def loss_fn(params, batch):
+        x = _inputs_to_embeds(params, batch, cfg)
+        S = x.shape[1]
+        x, _ = tfm.hybrid_stack(params["blocks"], x, cfg, jnp.arange(S)[None, :])
+        return _lm_loss(params, x, batch, cfg, jnp.zeros((), jnp.float32))
+
+    def prefill_fn(params, batch):
+        x = _inputs_to_embeds(params, batch, cfg)
+        S = x.shape[1]
+        x, states = tfm.hybrid_stack(params["blocks"], x, cfg,
+                                     jnp.arange(S)[None, :], collect=True)
+        return _last_logits(params, x, cfg), states
+
+    def decode_fn(params, cache, token, pos):
+        x = embed(params["tok"], token[:, None], cfg)
+        x, cache = tfm.hybrid_decode_step(params["blocks"], x, cfg, cache, pos)
+        logits = _last_logits(params, x, cfg)
+        return logits, cache
+
+    def cache_specs(batch, max_len):
+        Kn = cfg.attn_every
+        di, N = cfg.d_inner, cfg.ssm_state
+        conv_ch = di + 2 * N
+        return {
+            "attn_k": _sds((G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+            "attn_v": _sds((G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+            "conv": _sds((G, Kn, batch, cfg.conv_width - 1, conv_ch), jnp.bfloat16),
+            "ssm": _sds((G, Kn, batch, cfg.ssm_heads, cfg.ssm_head_dim, N), jnp.float32),
+        }
+
+    def input_specs(shape: ShapeConfig):
+        if shape.kind in ("train", "prefill"):
+            return _token_specs(cfg, shape, with_labels=shape.kind == "train")
+        B = shape.global_batch
+        return {"token": _sds((B,), jnp.int32), "pos": _sds((B,), jnp.int32),
+                "cache": cache_specs(B, shape.seq_len)}
+
+    return Model(cfg, init_params, loss_fn, prefill_fn, decode_fn,
+                 cache_specs, input_specs)
+
+
+# ---------------------------------------------------------------- encdec (whisper)
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def init_params(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "tok": embedding_params(k1, cfg),
+            "frontend_proj": dense_init(k4, cfg.d_model, cfg.d_model, pdtype(cfg)),
+            "enc_layers": tfm._stack_init(
+                k2, cfg.num_encoder_layers, lambda k: tfm.block_params(k, cfg)),
+            "layers": tfm._stack_init(
+                k3, cfg.num_layers, lambda k: tfm.block_params(k, cfg, cross=True)),
+            "ln_enc": norm_params(cfg),
+            "ln_f": norm_params(cfg),
+        }
+
+    def encode(params, frames):
+        x = frames.astype(cdtype(cfg)) @ params["frontend_proj"].astype(cdtype(cfg))
+        Se = x.shape[1]
+        x, _, _ = tfm.decoder_stack(params["enc_layers"], x, cfg,
+                                    jnp.arange(Se)[None, :], causal=False)
+        return apply_norm(params["ln_enc"], x, cfg)
+
+    def loss_fn(params, batch):
+        enc = encode(params, batch["frames"])
+        x = embed(params["tok"], batch["tokens"], cfg)
+        S = x.shape[1]
+        x, _, aux = tfm.decoder_stack(params["layers"], x, cfg,
+                                      jnp.arange(S)[None, :], enc_out=enc)
+        return _lm_loss(params, x, batch, cfg, aux)
+
+    def prefill_fn(params, batch):
+        enc = encode(params, batch["frames"])
+        x = embed(params["tok"], batch["tokens"], cfg)
+        S = x.shape[1]
+        x, kv, _ = tfm.decoder_stack(params["layers"], x, cfg,
+                                     jnp.arange(S)[None, :], enc_out=enc,
+                                     collect_cache=True)
+        # cross K/V per decoder layer, computed once
+        def xkv(p_l):
+            return tfm.cross_kv(p_l["cross"], enc, cfg)
+        ck, cv = jax.vmap(xkv)(params["layers"])
+        cache = {"k": kv[0], "v": kv[1], "ck": ck, "cv": cv}
+        return _last_logits(params, x, cfg), cache
+
+    def decode_fn(params, cache, token, pos):
+        x = embed(params["tok"], token[:, None], cfg)
+        slot = pos
+        cache_len = pos + 1
+
+        def body(h, inp):
+            p_l, kc, vc, ck, cv = inp
+            hh = apply_norm(p_l["ln1"], h, cfg)
+            q, k, v = attn.qkv_proj(p_l["attn"], hh, cfg, positions=pos[:, None])
+            from repro.models.kvcache import write_slot
+            kc, vc = write_slot((kc, vc), k, v, slot)
+            o = attn.decode_attention(q, kc, vc, cache_len)
+            B = h.shape[0]
+            h = h + o.reshape(B, 1, cfg.q_dim) @ p_l["attn"]["wo"].astype(cdtype(cfg))
+            hc = apply_norm(p_l["ln_cross"], h, cfg)
+            qc, _, _ = attn.qkv_proj(p_l["cross"], hc, cfg, positions=None)
+            oc = attn.decode_attention(qc, ck, cv, ck.shape[1])
+            h = h + oc.reshape(B, 1, cfg.q_dim) @ p_l["cross"]["wo"].astype(cdtype(cfg))
+            f, _ = tfm._ffn(p_l, apply_norm(p_l["ln2"], h, cfg), cfg)
+            return h + f, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        cache = dict(cache, k=k_new, v=v_new)
+        return _last_logits(params, x, cfg), cache
+
+    def cache_specs(batch, max_len):
+        L = cfg.num_layers
+        Se = max(max_len // cfg.encoder_seq_ratio, 1)
+        kv = (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        ckv = (L, batch, Se, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": _sds(kv, jnp.bfloat16), "v": _sds(kv, jnp.bfloat16),
+                "ck": _sds(ckv, jnp.bfloat16), "cv": _sds(ckv, jnp.bfloat16)}
+
+    def input_specs(shape: ShapeConfig):
+        B, S = shape.global_batch, shape.seq_len
+        Se = max(S // cfg.encoder_seq_ratio, 1)
+        if shape.kind == "train":
+            return {"frames": _sds((B, Se, cfg.d_model), jnp.bfloat16),
+                    "tokens": _sds((B, S), jnp.int32),
+                    "labels": _sds((B, S), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"frames": _sds((B, Se, cfg.d_model), jnp.bfloat16),
+                    "tokens": _sds((B, S), jnp.int32)}
+        return {"token": _sds((B,), jnp.int32), "pos": _sds((B,), jnp.int32),
+                "cache": cache_specs(B, shape.seq_len)}
+
+    return Model(cfg, init_params, loss_fn, prefill_fn, decode_fn,
+                 cache_specs, input_specs)

@@ -1,0 +1,158 @@
+"""RWKV-6 "Finch" blocks: data-dependent decay linear recurrence
+[arXiv:2404.05892]. Attention-free; decode state is O(1) in context.
+
+Time-mix: ddlerp token-shift (5-way LoRA mix), per-channel data-dependent
+decay w_t = exp(-exp(w0 + lora(x))), per-head (K×V) state recurrence
+  o_t = r_t · (S_{t-1} + diag(u)·k_t v_tᵀ),   S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ
+Channel-mix: shifted squared-ReLU FFN with sigmoid receptance gate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype, dense_init, group_norm_heads, pdtype
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def time_mix_params(key, cfg: ModelConfig):
+    D, H, K = cfg.d_model, cfg.rwkv_heads, cfg.rwkv_head_size
+    r_mix, r_dec = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    ks = jax.random.split(key, 12)
+    dt = pdtype(cfg)
+    return {
+        "mu_base": jnp.zeros((D,), dt),
+        "mu": jnp.zeros((5, D), dt),
+        "w_mix1": dense_init(ks[0], D, 5 * r_mix, dt, scale=0.01),
+        "w_mix2": (jax.random.normal(ks[1], (5, r_mix, D)) * 0.01).astype(dt),
+        "wr": dense_init(ks[2], D, D, dt),
+        "wk": dense_init(ks[3], D, D, dt),
+        "wv": dense_init(ks[4], D, D, dt),
+        "wg": dense_init(ks[5], D, D, dt),
+        "wo": dense_init(ks[6], D, D, dt),
+        "w0": jnp.full((D,), -2.0, dt),     # decay bias: w ≈ exp(-exp(-2)) ≈ .87
+        "w_dec1": dense_init(ks[7], D, r_dec, dt, scale=0.01),
+        "w_dec2": dense_init(ks[8], r_dec, D, dt, scale=0.01),
+        "u": (jax.random.normal(ks[9], (H, K)) * 0.1).astype(dt),
+        "ln_x_scale": jnp.ones((H, K), dt),
+        "ln_x_bias": jnp.zeros((H, K), dt),
+    }
+
+
+def channel_mix_params(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    return {
+        "mu_k": jnp.zeros((D,), dt),
+        "mu_r": jnp.zeros((D,), dt),
+        "wk": dense_init(k1, D, F, dt),
+        "wv": dense_init(k2, F, D, dt),
+        "wr": dense_init(k3, D, D, dt),
+    }
+
+
+def _ddlerp(p, x, xprev, cfg: ModelConfig):
+    """Data-dependent 5-way token-shift mix → dict name→mixed input."""
+    dt = cdtype(cfg)
+    dx = xprev - x
+    base = x + dx * p["mu_base"].astype(dt)
+    r_mix = cfg.rwkv_lora_mix
+    h = jnp.tanh(base @ p["w_mix1"].astype(dt))
+    h = h.reshape(*h.shape[:-1], 5, r_mix)
+    off = jnp.einsum("...fr,frd->...fd", h, p["w_mix2"].astype(dt))
+    mix = p["mu"].astype(dt) + off                              # (...,5,D)
+    return {n: x + dx * mix[..., i, :] for i, n in enumerate(_MIX_NAMES)}
+
+
+def _decay(p, xw, cfg: ModelConfig):
+    """w_t ∈ (0,1): exp(-exp(w0 + tanh(xw@W1)@W2)), computed in f32."""
+    z = xw.astype(jnp.float32)
+    lora = jnp.tanh(z @ p["w_dec1"].astype(jnp.float32)) @ p["w_dec2"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + lora))
+
+
+def _rkvwg(p, x, xprev, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    m = _ddlerp(p, x, xprev, cfg)
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_size
+    shp = (*x.shape[:-1], H, K)
+    r = (m["r"] @ p["wr"].astype(dt)).reshape(shp)
+    k = (m["k"] @ p["wk"].astype(dt)).reshape(shp)
+    v = (m["v"] @ p["wv"].astype(dt)).reshape(shp)
+    g = jax.nn.silu(m["g"] @ p["wg"].astype(dt))
+    w = _decay(p, m["w"], cfg).reshape(shp)                     # f32
+    return r, k, v, w, g
+
+
+def _out(p, o, g, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    B = o.shape[0]
+    lead = o.shape[:-2]
+    o = group_norm_heads(o.astype(dt), p["ln_x_scale"], p["ln_x_bias"])
+    o = o.reshape(*lead, cfg.d_model) * g
+    return o @ p["wo"].astype(dt)
+
+
+def time_mix(p, x, cfg: ModelConfig, state=None):
+    """x (B,S,D). state: (x_prev (B,D), S (B,H,K,K) f32) or None.
+    Returns (out (B,S,D), new_state)."""
+    B, S, D = x.shape
+    x_last = jnp.zeros((B, D), x.dtype) if state is None else state[0]
+    xprev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    r, k, v, w, g = _rkvwg(p, x, xprev, cfg)
+    u = p["u"].astype(jnp.float32)
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_size
+    s0 = (jnp.zeros((B, H, K, K), jnp.float32) if state is None
+          else state[1].astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                    # (B,H,K)
+        rt = rt.astype(jnp.float32)
+        kv = kt.astype(jnp.float32)[..., None] * vt.astype(jnp.float32)[..., None, :]
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, ot
+
+    xs = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), w.swapaxes(0, 1))
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    o = o.swapaxes(0, 1)                                        # (B,S,H,K)
+    out = _out(p, o, g, cfg)
+    return out, (x[:, -1], s_fin)
+
+
+def time_mix_step(p, x, cfg: ModelConfig, state):
+    """Single-token decode. x (B,D); state (x_prev, S)."""
+    x_prev, s = state
+    r, k, v, w, g = _rkvwg(p, x, x_prev, cfg)
+    s = s.astype(jnp.float32)
+    u = p["u"].astype(jnp.float32)
+    kv = k.astype(jnp.float32)[..., None] * v.astype(jnp.float32)[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32), s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    out = _out(p, o, g, cfg)
+    return out, (x, s_new)
+
+
+def channel_mix(p, x, cfg: ModelConfig, state=None):
+    """x (B,S,D); state x_prev (B,D). Returns (out, new_state)."""
+    dt = cdtype(cfg)
+    B = x.shape[0]
+    x_last = jnp.zeros((B, x.shape[-1]), x.dtype) if state is None else state
+    xprev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    return _channel_mix_core(p, x, xprev, cfg), x[:, -1]
+
+
+def channel_mix_step(p, x, cfg: ModelConfig, state):
+    return _channel_mix_core(p, x, state, cfg), x
+
+
+def _channel_mix_core(p, x, xprev, cfg):
+    dt = cdtype(cfg)
+    dx = xprev - x
+    xk = x + dx * p["mu_k"].astype(dt)
+    xr = x + dx * p["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    return jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (kk @ p["wv"].astype(dt))

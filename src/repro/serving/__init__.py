@@ -1,0 +1,3 @@
+from repro.serving.engine import EngineConfig, MultiTenantEngine  # noqa: F401
+from repro.serving.request import Request, RequestState  # noqa: F401
+from repro.serving.scheduler import QuotaScheduler  # noqa: F401

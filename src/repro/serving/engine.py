@@ -1,0 +1,243 @@
+"""Multi-tenant serving engine with DYVERSE dynamic vertical scaling.
+
+Each tenant serves its own model (any of the 10 assigned archs). The
+engine runs continuous batching per tenant inside a shared loop; DYVERSE
+periodically reallocates (slots, pages) quotas based on measured request
+latencies vs each tenant's SLO. Quota actuation is control-plane-only:
+the scheduler admits/preempts; no weights or caches move.
+
+CPU-sized models validate the full control loop end-to-end; on a pod the
+same engine runs with pjit-sharded models and the Pallas paged-attention
+decode kernel (kernels/paged_attention.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (DyverseController, NodeCapacity, Quota, ResourceUnit,
+                        TenantSpec)
+from repro.models import build_model
+from repro.serving.request import Phase, Request, RequestState
+from repro.serving.scheduler import QuotaScheduler
+
+CLOUD_LATENCY_S = 0.25       # WAN penalty for evicted/offloaded requests
+
+
+@dataclass
+class EngineConfig:
+    page_size: int = 16
+    slot_cap: int = 8                 # compiled decode batch per tenant
+    max_seq_len: int = 128
+    round_interval_steps: int = 40    # engine steps between DYVERSE rounds
+    policy: str = "sdps"
+    capacity_slots: int = 16
+    capacity_pages: int = 256
+    default_units: int = 2            # × uR(1 slot, 8 pages)
+
+
+class _EngineActuator:
+    def __init__(self, engine: "MultiTenantEngine"):
+        self.engine = engine
+
+    def apply_quota(self, tenant: str, quota: Quota) -> None:
+        sched = self.engine.sched
+        if tenant in sched.tenants:
+            q = Quota(min(quota.slots, self.engine.cfg.slot_cap), quota.pages)
+            sched.set_quota(tenant, q)
+        else:
+            sched.add_tenant(tenant, Quota(
+                min(quota.slots, self.engine.cfg.slot_cap), quota.pages))
+
+    def terminate(self, tenant: str) -> None:
+        self.engine._evict_tenant(tenant)
+
+
+class TenantRuntime:
+    """Per-tenant model + cache + compiled step functions."""
+
+    def __init__(self, name: str, cfg: ModelConfig, eng: EngineConfig, key):
+        self.name = name
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = self.model.init_params(key)
+        B, S = eng.slot_cap, eng.max_seq_len
+        specs = self.model.cache_specs(B, S)
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        self.pos = np.zeros(B, np.int64)           # next write index per slot
+        self.slot_req: list[RequestState | None] = [None] * B
+        self._decode = jax.jit(self.model.decode_fn)
+        self._prefill = jax.jit(self.model.prefill_fn)
+        self.last_token = np.zeros(B, np.int64)
+
+    def free_slot(self) -> int:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return -1
+
+
+class MultiTenantEngine:
+    def __init__(self, cfg: EngineConfig | None = None, seed: int = 0):
+        self.cfg = cfg or EngineConfig()
+        self.sched = QuotaScheduler(self.cfg.page_size)
+        self.ctrl = DyverseController(
+            capacity=NodeCapacity(slots=self.cfg.capacity_slots,
+                                  pages=self.cfg.capacity_pages),
+            uR=ResourceUnit(slots=1, pages=self.cfg.capacity_pages
+                            // max(self.cfg.capacity_slots, 1)),
+            policy=self.cfg.policy,
+            default_units=self.cfg.default_units,
+            actuator=_EngineActuator(self),
+        )
+        self.tenants: dict[str, TenantRuntime] = {}
+        self._key = jax.random.key(seed)
+        self._rid = 0
+        self.steps = 0
+        self.completed: list[RequestState] = []
+        self.cloud_serviced: list[RequestState] = []
+
+    # ------------------------------------------------------------ lifecycle
+    def add_tenant(self, spec: TenantSpec, model_cfg: ModelConfig) -> bool:
+        res = self.ctrl.admit(spec)
+        if not res.admitted:
+            return False
+        self._key, sub = jax.random.split(self._key)
+        self.tenants[spec.name] = TenantRuntime(spec.name, model_cfg,
+                                                self.cfg, sub)
+        return True
+
+    def _evict_tenant(self, tenant: str) -> None:
+        """Procedure 3 actuation: flush runtime, redirect requests to Cloud."""
+        for rs in self.sched.remove_tenant(tenant):
+            rs.finish_t = time.perf_counter() + CLOUD_LATENCY_S
+            self.cloud_serviced.append(rs)
+        self.tenants.pop(tenant, None)
+
+    def submit(self, tenant: str, prompt: list[int],
+               max_new_tokens: int = 8, user: int = 0) -> RequestState:
+        self._rid += 1
+        req = Request(rid=self._rid, tenant=tenant, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      arrival_t=time.perf_counter(), user=user)
+        if tenant not in self.tenants:
+            rs = RequestState(req=req, phase=Phase.EVICTED)
+            rs.finish_t = req.arrival_t + CLOUD_LATENCY_S
+            self.cloud_serviced.append(rs)
+            return rs
+        return self.sched.submit(req)
+
+    # ------------------------------------------------------------ stepping
+    def step(self) -> None:
+        now = time.perf_counter()
+        for name in list(self.tenants):
+            rt = self.tenants[name]
+            # admit new requests within quota and prefill them
+            for rs in self.sched.admit_waiting(name):
+                slot = rt.free_slot()
+                if slot < 0:
+                    # shouldn't happen (slots quota ≤ slot_cap) but be safe
+                    self.sched.tenants[name].active.remove(rs)
+                    rs.phase = Phase.QUEUED
+                    self.sched.tenants[name].waiting.appendleft(rs)
+                    continue
+                self._prefill_into_slot(rt, rs, slot)
+            # one decode step for all active slots
+            if any(r is not None for r in rt.slot_req):
+                self._decode_step(rt, now)
+        self.steps += 1
+        if self.cfg.policy != "none" and \
+                self.steps % self.cfg.round_interval_steps == 0:
+            self.ctrl.run_round()
+
+    def _prefill_into_slot(self, rt: TenantRuntime, rs: RequestState,
+                           slot: int) -> None:
+        cfg = rt.cfg
+        prompt = jnp.asarray(rs.req.prompt, jnp.int32)[None, :]
+        batch = {"tokens": prompt}
+        if cfg.is_encoder_decoder:
+            Se = max(prompt.shape[1] // cfg.encoder_seq_ratio, 1)
+            batch["frames"] = jnp.zeros((1, Se, cfg.d_model), jnp.bfloat16)
+        logits, cache1 = rt._prefill(rt.params, batch)
+        rt.cache = _insert_cache(rt.cache, cache1, slot, cfg,
+                                 self.cfg.max_seq_len)
+        tok = int(jnp.argmax(logits[0]))
+        rs.generated.append(tok)
+        rs.first_token_t = time.perf_counter()
+        rs.phase = Phase.DECODE
+        rs.batch_slot = slot
+        rt.slot_req[slot] = rs
+        rt.pos[slot] = len(rs.req.prompt)
+        rt.last_token[slot] = tok
+
+    def _decode_step(self, rt: TenantRuntime, now: float) -> None:
+        token = jnp.asarray(rt.last_token, jnp.int32)
+        pos = jnp.asarray(rt.pos, jnp.int32)
+        logits, rt.cache = rt._decode(rt.params, rt.cache, token, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        t_done = time.perf_counter()
+        for slot, rs in enumerate(rt.slot_req):
+            if rs is None:
+                continue
+            rs.generated.append(int(nxt[slot]))
+            rt.pos[slot] += 1
+            rt.last_token[slot] = int(nxt[slot])
+            done = (len(rs.generated) >= rs.req.max_new_tokens
+                    or rt.pos[slot] >= self.cfg.max_seq_len - 1)
+            if done:
+                self.sched.finish(rt.name, rs, t_done)
+                st = self.ctrl.registry.get(rt.name)
+                if st is not None:
+                    self.ctrl.monitor.record_request(
+                        rt.name, rs.latency(), st.spec.slo_latency,
+                        data_mb=len(rs.generated) * 4e-6, user=rs.req.user)
+                rt.slot_req[slot] = None
+                self.completed.append(rs)
+
+    def run(self, steps: int) -> None:
+        for _ in range(steps):
+            self.step()
+
+    def drain(self, max_steps: int = 2000) -> None:
+        for _ in range(max_steps):
+            if not any(tq.active or tq.waiting
+                       for tq in self.sched.tenants.values()):
+                return
+            self.step()
+
+
+def _insert_cache(cache, cache1, slot: int, cfg: ModelConfig, max_len: int):
+    """Insert a single-request prefill cache into batch caches at `slot`.
+    Handles the per-family cache layouts (batch axis position varies)."""
+    def ins(full, one, batch_axis, seq_axis=None):
+        one = one.astype(full.dtype)
+        if seq_axis is not None and one.shape[seq_axis] < full.shape[seq_axis]:
+            padw = [(0, 0)] * one.ndim
+            padw[seq_axis] = (0, full.shape[seq_axis] - one.shape[seq_axis])
+            one = jnp.pad(one, padw)
+        idx = [slice(None)] * full.ndim
+        idx[batch_axis] = slice(slot, slot + 1)
+        return full.at[tuple(idx)].set(one)
+
+    if cfg.family in ("dense", "moe", "encdec"):
+        out = dict(cache)
+        for k in cache:
+            out[k] = ins(cache[k], cache1[k], batch_axis=1, seq_axis=2)
+        return out
+    if cfg.family == "rwkv6":
+        return {k: ins(cache[k], cache1[k], batch_axis=1) for k in cache}
+    if cfg.family == "hybrid":
+        out = {}
+        for k in cache:
+            if k.startswith("attn"):
+                out[k] = ins(cache[k], cache1[k], batch_axis=1, seq_axis=2)
+            else:
+                out[k] = ins(cache[k], cache1[k], batch_axis=2)
+        return out
+    raise ValueError(cfg.family)

@@ -1,0 +1,113 @@
+"""Quota-aware continuous-batching scheduler.
+
+Per-tenant quotas come from DYVERSE (Quota.slots = concurrent decode
+sequences; Quota.pages = KV pages). A sequence of context length C holds
+ceil(C / page_size) pages of its tenant's page quota. When a quota
+shrinks below current usage the scheduler preempts the YOUNGEST sequences
+(they lose the least work) back to the queue — that is the engine-level
+actuation of a DYVERSE scale-down, and it is control-plane-only.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.core.types import Quota
+from repro.serving.request import Phase, Request, RequestState
+
+
+@dataclass
+class TenantQueues:
+    quota: Quota
+    waiting: deque = field(default_factory=deque)       # RequestState
+    active: list[RequestState] = field(default_factory=list)
+
+    def pages_used(self, page_size: int) -> int:
+        return sum(math.ceil(max(r.context_len, 1) / page_size)
+                   for r in self.active)
+
+
+class QuotaScheduler:
+    def __init__(self, page_size: int = 16):
+        self.page_size = page_size
+        self.tenants: dict[str, TenantQueues] = {}
+
+    # ---- tenant lifecycle -------------------------------------------------
+    def add_tenant(self, name: str, quota: Quota) -> None:
+        self.tenants[name] = TenantQueues(quota=quota)
+
+    def remove_tenant(self, name: str) -> list[RequestState]:
+        """Terminate (Procedure 3): all requests are evicted to the Cloud."""
+        tq = self.tenants.pop(name, None)
+        if tq is None:
+            return []
+        out = list(tq.active) + list(tq.waiting)
+        for r in out:
+            r.phase = Phase.EVICTED
+        return out
+
+    def set_quota(self, name: str, quota: Quota) -> list[RequestState]:
+        """DYVERSE vertical scaling actuation. Returns preempted requests."""
+        tq = self.tenants.get(name)
+        if tq is None:
+            return []
+        tq.quota = quota
+        preempted: list[RequestState] = []
+        # slots shrink → preempt youngest
+        while len(tq.active) > quota.slots:
+            victim = max(tq.active, key=lambda r: r.req.arrival_t)
+            tq.active.remove(victim)
+            victim.phase = Phase.QUEUED
+            victim.batch_slot = -1
+            tq.waiting.appendleft(victim)
+            preempted.append(victim)
+        # pages shrink → preempt youngest until within budget
+        while tq.pages_used(self.page_size) > quota.pages and tq.active:
+            victim = max(tq.active, key=lambda r: r.req.arrival_t)
+            tq.active.remove(victim)
+            victim.phase = Phase.QUEUED
+            victim.batch_slot = -1
+            tq.waiting.appendleft(victim)
+            preempted.append(victim)
+        return preempted
+
+    # ---- request flow -----------------------------------------------------
+    def submit(self, req: Request) -> RequestState:
+        rs = RequestState(req=req)
+        self.tenants[req.tenant].waiting.append(rs)
+        return rs
+
+    def admit_waiting(self, name: str) -> list[RequestState]:
+        """Move waiting→active while slot & page quotas allow. Returns the
+        newly admitted requests (they need prefill)."""
+        tq = self.tenants[name]
+        admitted = []
+        while tq.waiting:
+            cand: RequestState = tq.waiting[0]
+            need_pages = math.ceil(
+                (len(cand.req.prompt) + cand.req.max_new_tokens)
+                / self.page_size)
+            if len(tq.active) + 1 > tq.quota.slots:
+                break
+            if tq.pages_used(self.page_size) + need_pages > tq.quota.pages:
+                break
+            tq.waiting.popleft()
+            cand.phase = Phase.PREFILL
+            tq.active.append(cand)
+            admitted.append(cand)
+        return admitted
+
+    def finish(self, name: str, rs: RequestState, now: float) -> None:
+        tq = self.tenants[name]
+        if rs in tq.active:
+            tq.active.remove(rs)
+        rs.phase = Phase.DONE
+        rs.finish_t = now
+
+    # ---- views ------------------------------------------------------------
+    def active(self, name: str) -> list[RequestState]:
+        return self.tenants[name].active
+
+    def depth(self, name: str) -> int:
+        return len(self.tenants[name].waiting)

@@ -1,0 +1,2 @@
+from repro.sim.workload import GameWorkload, StreamWorkload, Workload  # noqa: F401
+from repro.sim.edgesim import EdgeNodeSim, SimConfig, SimResult  # noqa: F401

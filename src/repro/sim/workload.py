@@ -1,0 +1,147 @@
+"""Workload generators mirroring the paper's two use cases (§5 Setup).
+
+GameWorkload ≈ iPokeMon: a multi-user request/response server. Each
+tenant serves 1–100 users; each user issues frequent small requests
+(GPS/virtual-environment updates). Avg service time ≈ 78 ms; per-request
+payload is small (the paper measures 149 KB/s over 32 servers).
+
+StreamWorkload ≈ Face Detection: a single streaming source pushing
+0.1–1 frames/s; each frame is large (grey-scaled video; 4 MB/s over 32
+servers) and slow to process (avg 2.13 s).
+
+Latency model (per request, given the tenant's allocated units):
+    latency = base · max(1, ρ)^α · jitter,   ρ = demand_work / capacity
+with capacity = units · unit_rate and lognormal jitter. Under-provisioned
+tenants queue (ρ>1) and blow through their SLO; over-provisioned tenants
+sit at base latency — exactly the regime DYVERSE redistributes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Workload:
+    name: str
+    base_latency: float            # intrinsic service time (s)
+    work_per_request: float        # abstract work units per request
+    unit_rate: float               # work/s one resource unit can service
+    alpha: float = 1.3             # queueing exponent under overload
+    jitter_sigma: float = 0.08
+    data_per_request_mb: float = 0.005
+    migration_mb: float = 0.0      # state migrated to Cloud on termination
+
+    def requests_this_second(self, rng: np.random.Generator, t: int) -> int:
+        raise NotImplementedError
+
+    def users(self) -> int:
+        return 1
+
+    # a well-provisioned server services in ~0.72·base — under the SLO, below
+    # the dThr=0.8 scale-down threshold; moderately loaded tenants sit in
+    # the (0.8·SLO, SLO] donation band
+    provisioned_factor: float = 0.72
+
+    def demand_rate(self, t: int) -> float:
+        """Expected work/s at time t (drives queueing, not the lumpy
+        per-second arrival count)."""
+        raise NotImplementedError
+
+    def latencies(self, rng: np.random.Generator, n: int, units: int,
+                  t: int = 0) -> np.ndarray:
+        if n == 0:
+            return np.empty(0)
+        capacity = max(units, 1) * self.unit_rate
+        rho = self.demand_rate(t) / capacity
+        jit = rng.lognormal(0.0, self.jitter_sigma, size=n)
+        return (self.base_latency * self.provisioned_factor
+                * max(1.0, rho) ** self.alpha * jit)
+
+
+@dataclass
+class GameWorkload(Workload):
+    """iPokeMon-like: n_users each ~poisson(rate_per_user) req/s with a
+    diurnal-ish burst pattern."""
+
+    n_users: int = 50
+    rate_per_user: float = 0.5
+    burst_period: int = 300
+    burst_amp: float = 0.08
+
+    def __post_init__(self):
+        self.data_per_request_mb = 0.005
+        self.migration_mb = 0.05 * self.n_users  # user sessions move to Cloud
+
+    def _phase(self, t: int) -> float:
+        return 1.0 + self.burst_amp * np.sin(2 * np.pi * t / self.burst_period
+                                             + self.n_users)
+
+    def requests_this_second(self, rng: np.random.Generator, t: int) -> int:
+        lam = self.n_users * self.rate_per_user * max(self._phase(t), 0.05)
+        return int(rng.poisson(lam))
+
+    def demand_rate(self, t: int) -> float:
+        return (self.n_users * self.rate_per_user * max(self._phase(t), 0.05)
+                * self.work_per_request)
+
+    def users(self) -> int:
+        return self.n_users
+
+
+@dataclass
+class StreamWorkload(Workload):
+    """FD-like: single source, fps in [0.1, 1]; fractional fps accumulates."""
+
+    fps: float = 0.5
+    _acc: float = field(default=0.0, repr=False)
+
+    def __post_init__(self):
+        self.data_per_request_mb = 0.6     # one grey-scale frame
+        self.migration_mb = 0.0            # paper: no data migrated for FD
+
+    def requests_this_second(self, rng: np.random.Generator, t: int) -> int:
+        self._acc += self.fps
+        n = int(self._acc)
+        self._acc -= n
+        return n
+
+    def demand_rate(self, t: int) -> float:
+        return self.fps * self.work_per_request
+
+    def users(self) -> int:
+        return 1
+
+
+def make_game_fleet(n: int, rng: np.random.Generator,
+                    base_latency: float = 0.078) -> list[GameWorkload]:
+    """n tenants, each 1–100 users (paper §5), heterogeneous demand."""
+    fleet = []
+    for i in range(n):
+        users = int(rng.integers(1, 101))
+        fleet.append(GameWorkload(
+            name=f"game-{i}", base_latency=base_latency,
+            work_per_request=1.0,
+            # default 16 units violate above ~94 users nominally, ~87 at
+            # burst peak → ≈18% time-avg demand-weighted overflow (paper's
+            # no-scaling regime for the stringent SLO)
+            unit_rate=2.05,
+            n_users=users,
+            rate_per_user=0.5))
+    return fleet
+
+
+def make_stream_fleet(n: int, rng: np.random.Generator,
+                      base_latency: float = 2.13) -> list[StreamWorkload]:
+    """n tenants, each 0.1–1 fps (paper §5)."""
+    fleet = []
+    for i in range(n):
+        fps = float(rng.uniform(0.1, 1.0))
+        fleet.append(StreamWorkload(
+            name=f"fd-{i}", base_latency=base_latency,
+            work_per_request=8.0,
+            # default 16 units saturate at ~0.90 fps → ≈19% nominal overflow
+            unit_rate=0.35,
+            fps=fps))
+    return fleet

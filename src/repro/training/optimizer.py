@@ -1,0 +1,73 @@
+"""AdamW + warmup-cosine schedule, pure JAX (no optax dependency).
+
+Optimizer state mirrors the param pytree (m, v) and is sharded ZeRO-1
+style over the data axis by the launcher (see parallel.sharding.zero1_pspec).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def warmup_cosine(tc: TrainConfig):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = tc.learning_rate * step / jnp.maximum(tc.warmup_steps, 1)
+        prog = jnp.clip((step - tc.warmup_steps)
+                        / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0, 1)
+        cos = 0.5 * tc.learning_rate * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < tc.warmup_steps, warm, cos)
+    return lr
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.zeros_like, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, opt: OptState, tc: TrainConfig):
+    """Returns (new_params, new_opt, metrics)."""
+    step = opt.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if tc.grad_clip > 0 else jnp.float32(1.0)
+    lr = warmup_cosine(tc)(step)
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay * p.astype(jnp.float32)
+        return (p - lr * delta.astype(p.dtype)).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt.m)
+    flat_v = jax.tree.leaves(opt.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

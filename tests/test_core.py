@@ -1,0 +1,215 @@
+"""DYVERSE core: priority math (Eqs. 2-6), Procedures 1-3, pool invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Decision, DyverseController, NodeCapacity, PoolError,
+                        PricingModel, ResourcePool, ResourceUnit, TenantSpec,
+                        TenantState, Weights, cdps, priority_score, sdps, sps,
+                        wdps)
+from repro.core.types import Quota
+
+
+def mk_state(name="t0", ordinal=1, premium=0.0, age=0, loyalty=0,
+             scale=0, reward=0, pricing=PricingModel.HYBRID, donation=False):
+    spec = TenantSpec(name=name, slo_latency=0.1, premium=premium,
+                      pricing=pricing, donation=donation)
+    stt = TenantState(spec=spec, ordinal=ordinal, quota=Quota(4, 32))
+    stt.age, stt.loyalty = age, loyalty
+    stt.scale_count, stt.reward_count = scale, reward
+    return stt
+
+
+# ------------------------------------------------------------------ Eq. 2-6
+def test_sps_eq2():
+    stt = mk_state(ordinal=2, premium=3.0, age=1, loyalty=5)
+    # W_P*P + W_ID/ID + W_Age*Age + W_Loyalty*Loyalty = 3 + .5 + 1 + 5
+    assert sps(stt) == pytest.approx(9.5)
+
+
+def test_wdps_eq3_additive_for_pfr_hybrid():
+    stt = mk_state(pricing=PricingModel.PFR)
+    assert wdps(stt, 10, 5, 2.0) == pytest.approx(sps(stt) + 10 + 5 + 2.0)
+
+
+def test_wdps_eq4_reciprocal_for_pfp():
+    stt = mk_state(pricing=PricingModel.PFP)
+    assert wdps(stt, 10, 5, 2.0) == pytest.approx(sps(stt) + 0.1 + 0.2 + 0.5)
+    # heavier workload ⇒ LOWER priority under pay-for-period
+    assert wdps(stt, 100, 50, 20.0) < wdps(stt, 10, 5, 2.0)
+
+
+def test_cdps_eq5_rewards_donation():
+    a, b = mk_state(reward=0), mk_state(reward=3)
+    assert cdps(b, 1, 1, 1) == pytest.approx(cdps(a, 1, 1, 1) + 3)
+
+
+def test_sdps_eq6_penalises_frequent_scaling():
+    calm, churner = mk_state(scale=1), mk_state(scale=10)
+    assert sdps(churner, 1, 1, 1) < sdps(calm, 1, 1, 1)
+
+
+def test_policy_dispatch():
+    stt = mk_state()
+    for p in ("sps", "wdps", "cdps", "sdps"):
+        assert np.isfinite(priority_score(p, stt, 1, 1, 1))
+    with pytest.raises(ValueError):
+        priority_score("bogus", stt, 1, 1, 1)
+
+
+# ------------------------------------------------------------------ pool
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["admit", "grow", "shrink", "release"]),
+                          st.integers(0, 7), st.integers(1, 6)), max_size=40))
+def test_pool_invariants_under_random_ops(ops):
+    """Property: conservation + non-negativity hold under any op sequence."""
+    pool = ResourcePool(NodeCapacity(slots=64, pages=512), ResourceUnit(1, 8))
+    for op, tid, units in ops:
+        t = f"t{tid}"
+        try:
+            if op == "admit":
+                pool.admit(t, units)
+            elif op == "grow" and t in pool.tenants():
+                pool.grow(t, units)
+            elif op == "shrink" and t in pool.tenants():
+                pool.shrink(t, units)
+            elif op == "release" and t in pool.tenants():
+                pool.release(t)
+        except PoolError:
+            pass
+        pool.check_invariants()
+        used_s = sum(pool.quota(x).slots for x in pool.tenants())
+        assert used_s + pool.free.slots == 64
+
+
+# ------------------------------------------------------------------ procedures
+def make_ctrl(capacity=64, policy="sdps", **kw):
+    return DyverseController(NodeCapacity(slots=capacity, pages=capacity * 8),
+                             ResourceUnit(1, 8), policy=policy,
+                             default_units=4, **kw)
+
+
+def admit(ctrl, name, slo=0.1, **kw):
+    spec = TenantSpec(name=name, slo_latency=slo, **kw)
+    res = ctrl.admit(spec)
+    return res
+
+
+def test_admission_and_ageing():
+    ctrl = make_ctrl(capacity=8)          # room for two 4-unit tenants
+    assert admit(ctrl, "a").admitted
+    assert admit(ctrl, "b").admitted
+    assert not admit(ctrl, "c").admitted  # full → rejected, ages
+    assert ctrl._history["c"]["age"] == 1
+    # after release, c is admitted and carries its age into priority
+    ctrl.pool.release("a"); ctrl.registry.pop("a")
+    assert admit(ctrl, "c").admitted
+    assert ctrl.registry["c"].age == 1
+
+
+def _feed(ctrl, name, lat, n=100, slo=0.1):
+    ctrl.monitor.record_batch(name, np.full(n, lat), slo)
+
+
+def test_round_scales_up_violators():
+    ctrl = make_ctrl(capacity=64)
+    admit(ctrl, "hot"); admit(ctrl, "cold")
+    _feed(ctrl, "hot", 0.5)     # way over SLO 0.1 → VR=1 → want = R_s·1
+    _feed(ctrl, "cold", 0.05)   # under 0.8·SLO → scale down
+    report = ctrl.run_round()
+    acts = {a.tenant: a for a in report.actions}
+    assert acts["hot"].decision == Decision.SCALE_UP
+    assert ctrl.pool.units("hot") == 8          # 4 + round(4·1.0)
+    assert acts["cold"].decision == Decision.SCALE_DOWN
+    assert ctrl.pool.units("cold") == 3
+    assert ctrl.registry["hot"].scale_count == 1
+
+
+def test_scale_up_amount_proportional_to_vr():
+    """Procedure 2: aR_s = R_s · VR_s."""
+    ctrl = make_ctrl(capacity=64)
+    admit(ctrl, "x")
+    lat = np.concatenate([np.full(50, 0.2), np.full(50, 0.09)])  # VR = 0.5
+    ctrl.monitor.record_batch("x", lat, 0.1)
+    ctrl.run_round()
+    assert ctrl.pool.units("x") == 4 + round(4 * 0.5)
+
+
+def test_donation_branch_earns_reward_not_penalty():
+    ctrl = make_ctrl(capacity=64)
+    admit(ctrl, "donor", donation=True)
+    admit(ctrl, "keeper", donation=False)
+    _feed(ctrl, "donor", 0.09)   # in (0.8·SLO, SLO] band
+    _feed(ctrl, "keeper", 0.09)
+    report = ctrl.run_round()
+    acts = {a.tenant: a for a in report.actions}
+    assert acts["donor"].decision == Decision.SCALE_DOWN
+    assert ctrl.registry["donor"].reward_count == 1
+    assert ctrl.registry["donor"].scale_count == 0     # donations unpenalised
+    assert acts["keeper"].decision == Decision.NONE
+
+
+def test_eviction_frees_resources_for_high_priority():
+    ctrl = make_ctrl(capacity=8, policy="sps")
+    admit(ctrl, "vip", premium=10.0)
+    admit(ctrl, "pleb")
+    _feed(ctrl, "vip", 1.0)      # VR=1 → wants 4 more units; none free
+    _feed(ctrl, "pleb", 0.09)
+    report = ctrl.run_round()
+    assert "pleb" in report.terminated
+    assert "pleb" not in ctrl.registry
+    assert ctrl.pool.units("vip") == 8
+    assert ctrl._history["pleb"]["age"] == 1   # eviction ages the tenant
+
+
+def test_no_eviction_of_higher_priority():
+    ctrl = make_ctrl(capacity=8, policy="sps")
+    admit(ctrl, "first")                       # ordinal 1 → higher SPS
+    admit(ctrl, "second", premium=0.0)
+    _feed(ctrl, "second", 1.0)                 # violator but lower priority
+    _feed(ctrl, "first", 0.09)
+    report = ctrl.run_round()
+    assert report.terminated == []
+    assert "first" in ctrl.registry
+
+
+def test_round_is_single_pass_O_N():
+    """Each tenant is acted on at most once per round (Procedure 1 is O(N))."""
+    ctrl = make_ctrl(capacity=512)
+    for i in range(32):
+        admit(ctrl, f"t{i}")
+        _feed(ctrl, f"t{i}", 0.05 if i % 2 else 0.5)
+    report = ctrl.run_round()
+    non_term = [a for a in report.actions if a.decision != Decision.TERMINATE]
+    names = [a.tenant for a in non_term]
+    assert len(names) == len(set(names))
+
+
+def test_policy_none_is_static():
+    ctrl = make_ctrl(policy="none")
+    admit(ctrl, "a")
+    _feed(ctrl, "a", 5.0)
+    report = ctrl.run_round()
+    assert report.actions == []
+    assert ctrl.pool.units("a") == 4
+
+
+def test_normalized_mode_sdps_orders_by_scale_count():
+    """Beyond-paper: with normalised factors, equal-workload tenants are
+    ordered by scaling history under sdps (churner last)."""
+    ctrl = make_ctrl(capacity=64, policy="sdps", normalize_factors=True)
+    admit(ctrl, "calm"); admit(ctrl, "churn")
+    ctrl.registry["churn"].scale_count = 20
+    _feed(ctrl, "calm", 0.085); _feed(ctrl, "churn", 0.085)
+    ctrl.monitor.roll_round()
+    _feed(ctrl, "calm", 0.085); _feed(ctrl, "churn", 0.085)
+    ctrl.update_priorities()
+    assert ctrl.registry["calm"].priority > ctrl.registry["churn"].priority
+
+
+def test_eq1_node_violation_rate():
+    ctrl = make_ctrl()
+    admit(ctrl, "a"); admit(ctrl, "b")
+    ctrl.monitor.record_batch("a", [0.5, 0.05], 0.1)   # 1 violation / 2
+    ctrl.monitor.record_batch("b", [0.05, 0.05], 0.1)  # 0 / 2
+    assert ctrl.node_violation_rate == pytest.approx(0.25)

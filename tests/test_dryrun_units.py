@@ -1,0 +1,127 @@
+"""Dry-run machinery unit tests (no 512-device compile — that's the
+sweep's job; results land in results/dryrun and EXPERIMENTS.md)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.dryrun import (_group_size, model_flops, parse_collectives)
+from repro.models import build_model
+from repro.parallel.sharding import fit_spec, params_pspecs, zero1_pspec
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ar = f32[1024,512]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %consumer = f32[65536,2048]{1,0} fusion(%ar, %y), kind=kLoop
+  %ag = bf16[32,128]{1,0} all-gather(%z), replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = (s8[64,256]{1,0}, s8[64,256]{1,0}) all-to-all(%a, %b), replica_groups=[2,8]<=[16]
+  %cp = bf16[8,8]{1,0} collective-permute(%c), source_target_pairs={{0,1}}
+  %rs = f32[128]{0} reduce-scatter(%d), replica_groups=[4,4]<=[16], dimensions={0}
+  %ard = f32[1024]{0} all-reduce-done(%ars)
+}
+"""
+
+
+def test_parse_collectives_ops_and_sizes():
+    out = parse_collectives(HLO_SAMPLE)
+    ops = out["ops"]
+    # fusion consumer referencing %ar must NOT be counted
+    assert ops["all-reduce"]["count"] == 1
+    assert ops["all-reduce"]["payload_bytes"] == 1024 * 512 * 4
+    # ring all-reduce wire = 2·S·(k-1)/k with k=16
+    assert ops["all-reduce"]["wire_bytes"] == pytest.approx(
+        2 * 1024 * 512 * 4 * 15 / 16)
+    assert ops["all-gather"]["count"] == 1
+    assert ops["all-gather"]["payload_bytes"] == 32 * 128 * 2
+    # variadic all-to-all sums tuple element sizes
+    assert ops["all-to-all"]["payload_bytes"] == 2 * 64 * 256 * 1
+    assert ops["collective-permute"]["payload_bytes"] == 8 * 8 * 2
+    assert ops["reduce-scatter"]["count"] == 1
+    # -done ops are not double counted
+    assert sum(v["count"] for v in ops.values()) == 5
+
+
+def test_group_size_parsing():
+    assert _group_size("replica_groups=[16,16]<=[256]") == 16
+    assert _group_size("replica_groups={{0,1,2,3}}") == 4
+
+
+def test_model_flops_moe_uses_active_params():
+    arctic = get_config("arctic-480b")
+    dense_equiv = arctic.param_count()
+    active = arctic.active_param_count()
+    assert active < dense_equiv / 10     # 2-of-128 experts
+    mf = model_flops(arctic, SHAPES["train_4k"])
+    assert mf == pytest.approx(6 * active * 256 * 4096)
+
+
+def test_cell_accounting_40_cells():
+    cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    assert len(cells) == 40
+    runnable = [c for c in cells
+                if shape_applicable(get_config(c[0]), SHAPES[c[1]])]
+    skipped = [c for c in cells
+               if not shape_applicable(get_config(c[0]), SHAPES[c[1]])]
+    assert len(runnable) == 33
+    assert all(s == "long_500k" for _, s in skipped)
+    long_runners = {a for a, s in runnable if s == "long_500k"}
+    assert long_runners == {"rwkv6-3b", "h2o-danube-3-4b", "zamba2-2.7b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_defined_for_all_applicable_shapes(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    for shape in SHAPES.values():
+        if not shape_applicable(cfg, shape):
+            continue
+        specs = model.input_specs(shape)
+        assert specs, f"{arch}/{shape.name}: empty specs"
+        for name, sds in jax.tree.leaves_with_path(specs):
+            assert 0 not in sds.shape
+        if shape.kind == "decode":
+            assert "cache" in specs and "token" in specs
+
+
+def test_param_pspecs_cover_all_leaves():
+    for arch in ("tinyllama-1.1b", "arctic-480b", "rwkv6-3b", "zamba2-2.7b",
+                 "whisper-small"):
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        sds = jax.eval_shape(model.init_params, jax.random.key(0))
+        specs = params_pspecs(sds)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        flat_p = jax.tree.leaves(sds)
+        assert len(flat_s) == len(flat_p)
+        for spec, leaf in zip(flat_s, flat_p):
+            assert isinstance(spec, P)
+            assert len(spec) <= len(leaf.shape)
+
+
+def test_fit_spec_drops_nondivisible(monkeypatch):
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16), object)
+
+    fm = FakeMesh()
+    assert fit_spec((32, 100), P(None, "model"), fm) == P(None, None)
+    assert fit_spec((32, 128), P(None, "model"), fm) == P(None, "model")
+    assert fit_spec((51865,), P("model"), fm) == P(None)
+
+
+def test_zero1_shards_first_divisible_dim():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16), object)
+
+    out = zero1_pspec(P(None, "model"), (4096, 11008), FakeMesh())
+    assert out == P("data", "model")
+    out = zero1_pspec(P(None, None), (7, 4096), FakeMesh())
+    assert out == P(None, "data")

@@ -1,0 +1,176 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (CPU). TPU is the compile target; interpret executes the same kernel
+body for correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(42)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KH,S,D,bq,bk", [
+    (2, 4, 2, 128, 32, 64, 64),
+    (1, 8, 8, 64, 64, 32, 32),     # MHA
+    (2, 4, 1, 96, 16, 32, 32),     # MQA, ragged seq vs block
+    (1, 2, 2, 130, 32, 64, 64),    # non-multiple seq (padding path)
+])
+def test_flash_attention_sweep(B, H, KH, S, D, bq, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (B, H, S, D), dtype)
+    k = rand(ks[1], (B, KH, S, D), dtype)
+    v = rand(ks[2], (B, KH, S, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(KEY, 3)
+    B, H, KH, S, D = 2, 4, 2, 128, 32
+    q = rand(ks[0], (B, H, S, D), jnp.float32)
+    k = rand(ks[1], (B, KH, S, D), jnp.float32)
+    v = rand(ks[2], (B, KH, S, D), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=32, block_k=32, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (1, 2, 64, 32), jnp.float32)
+    k = rand(ks[1], (1, 2, 64, 32), jnp.float32)
+    v = rand(ks[2], (1, 2, 64, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, block_q=32, block_k=32,
+                              interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- paged attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KH,D,page,pool,mp", [
+    (2, 4, 2, 32, 16, 32, 4),
+    (3, 8, 8, 64, 8, 64, 6),
+    (1, 4, 1, 16, 16, 16, 2),
+])
+def test_paged_attention_sweep(B, H, KH, D, page, pool, mp, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = rand(ks[0], (B, H, D), dtype)
+    k_pool = rand(ks[1], (KH, pool, page, D), dtype)
+    v_pool = rand(ks[2], (KH, pool, page, D), dtype)
+    # distinct random pages per sequence + ragged lengths
+    rng = np.random.default_rng(0)
+    pt = np.stack([rng.choice(pool, size=mp, replace=False) for _ in range(B)])
+    lengths = rng.integers(1, mp * page + 1, size=B)
+    pt_j = jnp.asarray(pt, jnp.int32)
+    ln_j = jnp.asarray(lengths, jnp.int32)
+    out = ops.paged_attention(q, k_pool, v_pool, pt_j, ln_j, interpret=True)
+    expect = ref.paged_attention_ref(q, k_pool, v_pool, pt_j, ln_j)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_paged_attention_quota_resize_is_data_stable():
+    """DYVERSE invariant: growing a tenant's page quota (appending table
+    entries) must not change attention over the existing prefix."""
+    ks = jax.random.split(KEY, 4)
+    B, H, KH, D, page, pool = 1, 4, 2, 32, 16, 32
+    q = rand(ks[0], (B, H, D), jnp.float32)
+    kp = rand(ks[1], (KH, pool, page, D), jnp.float32)
+    vp = rand(ks[2], (KH, pool, page, D), jnp.float32)
+    pt_small = jnp.asarray([[3, 7]], jnp.int32)
+    pt_big = jnp.asarray([[3, 7, 11, 19]], jnp.int32)   # quota grew
+    ln = jnp.asarray([29], jnp.int32)                   # same valid tokens
+    out_s = ops.paged_attention(q, kp, vp, pt_small, ln, interpret=True)
+    out_b = ops.paged_attention(q, kp, vp, pt_big, ln, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_b),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------- rwkv6
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,K,chunk", [
+    (2, 2, 64, 16, 16),
+    (1, 4, 96, 32, 32),
+    (2, 1, 50, 16, 16),    # non-multiple T (padding path)
+])
+def test_rwkv6_sweep(B, H, T, K, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    r = rand(ks[0], (B, H, T, K), dtype)
+    k = rand(ks[1], (B, H, T, K), dtype)
+    v = rand(ks[2], (B, H, T, K), dtype)
+    w = jax.nn.sigmoid(rand(ks[3], (B, H, T, K), jnp.float32)).astype(jnp.float32)
+    u = rand(ks[4], (H, K), jnp.float32)
+    o, s = ops.rwkv6_forward(r, k, v, w, u, chunk=chunk, interpret=True)
+    o_ref, s_ref = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               **tol(dtype))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- ssd
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,P,N,chunk", [
+    (2, 2, 128, 16, 16, 32),
+    (1, 4, 64, 32, 32, 64),
+    (2, 1, 96, 16, 8, 32),
+])
+def test_ssd_sweep(B, H, T, P, N, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = rand(ks[0], (B, H, T, P), dtype)
+    dt = jax.nn.softplus(rand(ks[1], (B, H, T), jnp.float32))
+    a_log = rand(ks[2], (H,), jnp.float32) * 0.5
+    Bm = rand(ks[3], (B, T, N), jnp.float32)
+    Cm = rand(ks[4], (B, T, N), jnp.float32)
+    y, s = ops.ssd_forward(x, dt, a_log, Bm, Cm, chunk=chunk, interpret=True)
+    y_ref, s_ref = ref.ssd_ref(x, dt, a_log, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               **tol(dtype))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- property tests
+@settings(max_examples=10, deadline=None)
+@given(seq=st.sampled_from([32, 64, 96]),
+       heads=st.sampled_from([(4, 2), (4, 4), (8, 1)]),
+       seed=st.integers(0, 2**16))
+def test_flash_attention_property(seq, heads, seed):
+    """Property: kernel == oracle for random GQA configs; rows are convex
+    combinations of V rows (output magnitude bounded by max |v|)."""
+    H, KH = heads
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = rand(ks[0], (1, H, seq, 16), jnp.float32)
+    k = rand(ks[1], (1, KH, seq, 16), jnp.float32)
+    v = rand(ks[2], (1, KH, seq, 16), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-4

@@ -1,0 +1,157 @@
+"""Model substrate correctness: all 10 assigned archs (reduced configs).
+
+Key invariant: prefill(tokens[:S]) then decode(token[S]) must produce the
+same logits as a full forward over tokens[:S+1] at the last position.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import build_model
+from repro.models.attention import (chunked_attention, full_attention_reference,
+                                    swa_attention)
+from repro.models.mamba2 import ssd_chunked, ssd_reference
+from repro.models.moe import moe_ffn, moe_ffn_dense_reference, moe_params
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key, batch=B, seq=S, labels=True):
+    ks = jax.random.split(key, 3)
+    d = {}
+    if cfg.frontend == "vision":
+        d["embeds"] = jax.random.normal(ks[0], (batch, seq, cfg.d_model), jnp.bfloat16)
+    else:
+        d["tokens"] = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)
+    if labels:
+        d["labels"] = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size)
+    if cfg.is_encoder_decoder:
+        d["frames"] = jax.random.normal(
+            ks[2], (batch, seq // cfg.encoder_seq_ratio, cfg.d_model), jnp.bfloat16)
+    return d
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_loss_finite_and_shapes(arch):
+    cfg = get_reduced(arch)
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    batch = make_batch(cfg, jax.random.key(1))
+    loss, metrics = jax.jit(m.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch} loss not finite"
+    assert 3.0 < float(loss) < 9.0  # ~ln(vocab) at init
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_grads_finite(arch):
+    cfg = get_reduced(arch)
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    batch = make_batch(cfg, jax.random.key(1))
+    grads = jax.jit(jax.grad(lambda p, b: m.loss_fn(p, b)[0]))(params, batch)
+    leaves = jax.tree.leaves(grads)
+    assert leaves
+    for g in leaves:
+        assert np.all(np.isfinite(np.asarray(g, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """prefill S tokens + decode token S == forward S+1 tokens (last logits)."""
+    cfg = get_reduced(arch)
+    if cfg.attention == "swa":
+        cfg = get_reduced(arch, window=32)  # exercise windowing with S=64
+    m = build_model(cfg)
+    params = m.init_params(jax.random.key(0))
+    seq = S
+    full = make_batch(cfg, jax.random.key(1), seq=seq + 1, labels=False)
+    if cfg.frontend == "vision":
+        pytest.skip("vlm decode starts from token ids; covered by smoke test")
+    pre = dict(full)
+    pre["tokens"] = full["tokens"][:, :seq]
+
+    last_logits, cache = jax.jit(m.prefill_fn)(params, pre)
+
+    tok = full["tokens"][:, seq]
+    pos = jnp.full((B,), seq, jnp.int32)
+    cache = _grow_cache(m, cfg, cache, seq + 1)
+    dec_logits, _ = jax.jit(m.decode_fn)(params, cache, tok, pos)
+
+    # reference: full forward; compute last-position logits via prefill on S+1
+    ref_logits, _ = jax.jit(m.prefill_fn)(params, full)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(ref_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def _grow_cache(m, cfg, cache, max_len):
+    from repro.models.kvcache import grow_cache
+    return grow_cache(cfg, cache, max_len)
+
+
+def test_chunked_attention_matches_reference():
+    key = jax.random.key(0)
+    for (h, kh, seq, chunk) in [(4, 2, 96, 32), (8, 8, 64, 64), (4, 1, 128, 32)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (2, seq, h, 16))
+        k = jax.random.normal(ks[1], (2, seq, kh, 16))
+        v = jax.random.normal(ks[2], (2, seq, kh, 16))
+        out = chunked_attention(q, k, v, causal=True, chunk=chunk)
+        ref = full_attention_reference(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_swa_attention_matches_reference():
+    key = jax.random.key(1)
+    for (seq, w) in [(128, 32), (64, 64), (96, 32)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (2, seq, 4, 16))
+        k = jax.random.normal(ks[1], (2, seq, 2, 16))
+        v = jax.random.normal(ks[2], (2, seq, 2, 16))
+        out = swa_attention(q, k, v, window=w)
+        ref = full_attention_reference(q, k, v, causal=True, window=w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_chunked_matches_scan():
+    key = jax.random.key(2)
+    Bz, seq, H, P, N = 2, 128, 4, 8, 16
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (Bz, seq, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bz, seq, H)))
+    a_log = jax.random.normal(ks[2], (H,)) * 0.5
+    Bm = jax.random.normal(ks[3], (Bz, seq, N))
+    Cm = jax.random.normal(ks[4], (Bz, seq, N))
+    y1, s1 = ssd_chunked(xh, dt, a_log, Bm, Cm, chunk=32)
+    y2, s2 = ssd_reference(xh, dt, a_log, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_matches_dense_reference_when_no_drop():
+    cfg = get_reduced("olmoe-1b-7b", capacity_factor=8.0)  # no token drops
+    key = jax.random.key(3)
+    params = moe_params(key, cfg)
+    x = jax.random.normal(jax.random.key(4), (2, 16, cfg.d_model), jnp.float32)
+    cfg32 = cfg.__class__(**{**cfg.__dict__, "dtype": "float32"})
+    out, aux = moe_ffn(params, x, cfg32)
+    ref = moe_ffn_dense_reference(params, x, cfg32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_full_configs_instantiable():
+    """Full configs are dry-run-only, but must at least build specs."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        m = build_model(cfg)
+        from repro.configs import SHAPES
+        specs = m.input_specs(SHAPES["train_4k"])
+        assert specs
+        n = cfg.param_count()
+        assert n > 1e8, f"{arch}: param count {n} implausibly small"

@@ -1,0 +1,144 @@
+"""Multi-tenant serving engine + DYVERSE integration."""
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import Quota, TenantSpec
+from repro.serving import EngineConfig, MultiTenantEngine
+from repro.serving.request import Phase, Request
+from repro.serving.scheduler import QuotaScheduler
+
+
+def mk_req(rid, tenant="t", prompt_len=8, max_new=4, t0=0.0):
+    return Request(rid=rid, tenant=tenant, prompt=list(range(1, prompt_len + 1)),
+                   max_new_tokens=max_new, arrival_t=t0)
+
+
+# ---------------------------------------------------------------- scheduler
+def test_scheduler_respects_slot_quota():
+    s = QuotaScheduler(page_size=16)
+    s.add_tenant("t", Quota(slots=2, pages=100))
+    for i in range(5):
+        s.submit(mk_req(i, t0=i))
+    admitted = s.admit_waiting("t")
+    assert len(admitted) == 2
+    assert s.depth("t") == 3
+
+
+def test_scheduler_respects_page_quota():
+    s = QuotaScheduler(page_size=16)
+    s.add_tenant("t", Quota(slots=10, pages=2))   # 2 pages = 32 tokens
+    s.submit(mk_req(1, prompt_len=20, max_new=4))  # needs 2 pages
+    s.submit(mk_req(2, prompt_len=20, max_new=4))
+    admitted = s.admit_waiting("t")
+    assert len(admitted) == 1                      # second doesn't fit
+
+
+def test_quota_shrink_preempts_youngest():
+    s = QuotaScheduler(page_size=16)
+    s.add_tenant("t", Quota(slots=3, pages=100))
+    rs = [s.submit(mk_req(i, t0=float(i))) for i in range(3)]
+    s.admit_waiting("t")
+    pre = s.set_quota("t", Quota(slots=1, pages=100))
+    assert len(pre) == 2
+    assert pre[0].req.arrival_t >= pre[1].req.arrival_t   # youngest first
+    assert len(s.active("t")) == 1
+    assert s.active("t")[0] is rs[0]                      # oldest survives
+
+
+def test_remove_tenant_evicts_all():
+    s = QuotaScheduler()
+    s.add_tenant("t", Quota(slots=2, pages=100))
+    for i in range(4):
+        s.submit(mk_req(i))
+    s.admit_waiting("t")
+    out = s.remove_tenant("t")
+    assert len(out) == 4
+    assert all(r.phase == Phase.EVICTED for r in out)
+    assert "t" not in s.tenants
+
+
+# ---------------------------------------------------------------- engine
+@pytest.fixture(scope="module")
+def engine():
+    eng = MultiTenantEngine(EngineConfig(policy="none", slot_cap=4,
+                                         capacity_slots=8,
+                                         capacity_pages=128,
+                                         max_seq_len=64))
+    assert eng.add_tenant(TenantSpec(name="chat", slo_latency=60.0),
+                          get_reduced("tinyllama-1.1b"))
+    assert eng.add_tenant(TenantSpec(name="ssm", slo_latency=60.0),
+                          get_reduced("rwkv6-3b"))
+    return eng
+
+
+def test_engine_completes_mixed_tenants(engine):
+    rng = np.random.default_rng(0)
+    rs = []
+    for i in range(6):
+        t = "chat" if i % 2 else "ssm"
+        rs.append(engine.submit(t, list(rng.integers(1, 200, 8)),
+                                max_new_tokens=4))
+    engine.drain(max_steps=100)
+    assert all(r.phase == Phase.DONE for r in rs)
+    assert all(len(r.generated) == 4 for r in rs)
+    assert all(r.latency() is not None and r.latency() > 0 for r in rs)
+
+
+def test_engine_greedy_decode_deterministic(engine):
+    out = []
+    for _ in range(2):
+        r = engine.submit("chat", [5, 6, 7, 8, 9, 10, 11, 12], max_new_tokens=5)
+        engine.drain(max_steps=60)
+        out.append(tuple(r.generated))
+    assert out[0] == out[1]
+
+
+def test_submit_to_unknown_tenant_goes_to_cloud(engine):
+    before = len(engine.cloud_serviced)
+    r = engine.submit("nope", [1, 2, 3])
+    assert r.phase == Phase.EVICTED
+    assert len(engine.cloud_serviced) == before + 1
+
+
+def test_dyverse_round_scales_up_violating_tenant():
+    eng = MultiTenantEngine(EngineConfig(policy="sps", slot_cap=4,
+                                         capacity_slots=8, capacity_pages=128,
+                                         max_seq_len=64,
+                                         round_interval_steps=10**9))
+    # SLO impossible on CPU → every request violates → scale-up on round
+    assert eng.add_tenant(TenantSpec(name="hot", slo_latency=1e-4),
+                          get_reduced("tinyllama-1.1b"))
+    for i in range(4):
+        eng.submit("hot", [1, 2, 3, 4], max_new_tokens=2)
+    eng.drain(max_steps=60)
+    before = eng.ctrl.pool.units("hot")
+    eng.ctrl.run_round()
+    after = eng.ctrl.pool.units("hot")
+    assert after > before
+    assert eng.ctrl.registry["hot"].scale_count == 1
+
+
+def test_engine_termination_redirects_to_cloud():
+    eng = MultiTenantEngine(EngineConfig(policy="sps", slot_cap=2,
+                                         capacity_slots=4, capacity_pages=64,
+                                         max_seq_len=64,
+                                         round_interval_steps=10**9))
+    # two tenants; "vip" violates hard and needs more than free → evict "low"
+    assert eng.add_tenant(TenantSpec(name="vip", slo_latency=1e-4, premium=5.0),
+                          get_reduced("tinyllama-1.1b"))
+    assert eng.add_tenant(TenantSpec(name="low", slo_latency=60.0),
+                          get_reduced("tinyllama-1.1b"))
+    for i in range(3):
+        eng.submit("vip", [1, 2, 3], max_new_tokens=2)
+        eng.submit("low", [4, 5, 6], max_new_tokens=2)
+    eng.drain(max_steps=80)
+    eng.submit("low", [7, 8], max_new_tokens=2)   # in-flight during eviction
+    eng.ctrl.run_round()
+    assert "low" not in eng.ctrl.registry
+    assert "low" not in eng.tenants
+    assert any(r.req.tenant == "low" for r in eng.cloud_serviced)
+    # vip keeps running after the round
+    r = eng.submit("vip", [9, 10, 11], max_new_tokens=2)
+    eng.drain(max_steps=40)
+    assert r.phase == Phase.DONE

@@ -1,0 +1,72 @@
+"""Edge-node simulator: paper-claim orderings on short runs."""
+import numpy as np
+import pytest
+
+from repro.sim.edgesim import EdgeNodeSim, SimConfig
+from repro.sim.workload import (GameWorkload, StreamWorkload,
+                                make_game_fleet, make_stream_fleet)
+
+
+def run(kind, policy, n=16, duration=600, seed=7, **kw):
+    rng = np.random.default_rng(42)
+    fleet = (make_game_fleet(n, rng) if kind == "game"
+             else make_stream_fleet(n, rng))
+    cfg = SimConfig(policy=policy, duration_s=duration,
+                    round_interval=150, seed=seed,
+                    capacity_units=int(490 * n / 32), **kw)
+    return EdgeNodeSim(fleet, cfg).run()
+
+
+@pytest.mark.parametrize("kind", ["game", "fd"])
+def test_scaling_reduces_violations(kind):
+    none = run(kind, "none")
+    sps = run(kind, "sps")
+    sdps = run(kind, "sdps")
+    assert sps.violation_rate < none.violation_rate
+    assert sdps.violation_rate < none.violation_rate
+
+
+def test_violation_rate_grows_with_tenants():
+    small = run("game", "none", n=8)
+    big = run("game", "none", n=32)
+    # same per-tenant capacity scaling; more tenants → more contention tail
+    assert big.violation_rate >= small.violation_rate - 0.02
+
+
+def test_lenient_slo_reduces_violations():
+    tight = run("fd", "sps", seed=3)
+    loose = run("fd", "sps", seed=3, slo_scale=1.10)
+    assert loose.violation_rate < tight.violation_rate
+
+
+def test_overheads_recorded_and_subsecond():
+    r = run("game", "sdps")
+    assert r.overhead_priority_s and r.overhead_scaling_s
+    # paper: sub-second per server; ours is control-plane-only
+    assert r.mean_overhead_per_server_s < 1.0
+
+
+def test_latency_model_monotone_in_units():
+    wl = GameWorkload(name="g", base_latency=0.078, work_per_request=1.0,
+                      unit_rate=2.0, n_users=80)
+    rng = np.random.default_rng(0)
+    lat_few = wl.latencies(rng, 100, units=4, t=0).mean()
+    lat_many = wl.latencies(rng, 100, units=40, t=0).mean()
+    assert lat_few > lat_many
+
+
+def test_stream_demand_is_rate_based():
+    wl = StreamWorkload(name="s", base_latency=2.13, work_per_request=8.0,
+                        unit_rate=0.35, fps=0.2)
+    # low-fps stream must not see burst-of-one overload
+    rng = np.random.default_rng(0)
+    lat = wl.latencies(rng, 1, units=16, t=0)
+    assert lat[0] < 2.13  # provisioned_factor < 1 ⇒ under SLO
+
+
+def test_eviction_redirects_to_cloud_latency():
+    r = run("game", "sps", n=32, duration=900)
+    if r.terminated:
+        # evicted tenants keep being serviced (latency array non-empty and
+        # includes WAN-penalised requests)
+        assert r.latencies.size > 0
