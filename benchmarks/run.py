@@ -92,6 +92,24 @@ def main() -> None:
             _csv(f"serving/throughput/{r['tenants']}t", 0.0,
                  f"{r['tokens_per_s']:.1f} tok/s")
 
+    if want("fed"):
+        from benchmarks import federation_bench
+        sp = federation_bench.engine_speedup()
+        results["fed_speedup"] = sp
+        _csv("fed/engine_speedup", sp["vector_wall_s"] * 1e6,
+             f"{sp['speedup']:.1f}x vs scalar loop "
+             f"({sp['vector_steps_per_s']:.0f} vs "
+             f"{sp['scalar_steps_per_s']:.0f} sim-steps/s, "
+             f"identical={sp['bitwise_identical']})")
+        rows = federation_bench.federation_sweep()
+        results["fed_sweep"] = rows
+        for r in rows:
+            _csv(f"fed/{r['n_nodes']}node/{r['policy']}",
+                 r["max_round_overhead_s"] * 1e6,
+                 f"VR={r['violation_rate'] * 100:.1f}% "
+                 f"replaced={r['replaced']} cloud={r['cloud']} "
+                 f"max-node-overhead={r['max_round_overhead_s'] * 1e3:.2f}ms")
+
     if want("roofline"):
         from benchmarks.roofline_report import roofline_table
         rows = roofline_table()

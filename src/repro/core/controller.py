@@ -85,6 +85,18 @@ class DyverseController:
         self.actuator.apply_quota(spec.name, quota)
         return AdmissionResult(True)
 
+    def prior_age(self, name: str) -> int:
+        """Age_s the Edge Manager remembers for a (possibly departed)
+        tenant — rejections and Procedure-3 terminations both count."""
+        return self._history.get(name, {"age": 0})["age"]
+
+    def remember_age(self, name: str, age: int) -> None:
+        """Import a tenant's Age_s from another Edge Manager (federation
+        re-placement), so a subsequent ``admit`` builds the TenantState
+        with the carried-over ageing credit rather than starting at 0."""
+        hist = self._history.setdefault(name, {"age": 0, "loyalty": 0})
+        hist["age"] = max(hist["age"], age)
+
     # ------------------------------------------------------------ procedures
     def update_priorities(self) -> float:
         """Procedure 1, line 1. Returns wall-clock overhead (seconds)."""
@@ -216,6 +228,34 @@ class DyverseController:
     @property
     def node_violation_rate(self) -> float:
         return self.monitor.node_violation_rate
+
+    def can_admit(self, units: int | None = None) -> bool:
+        """Would a new tenant at ``units`` (default quota) fit?"""
+        return self.pool.can_admit(
+            self.default_units if units is None else units)
+
+    @property
+    def capacity_units(self) -> int:
+        """Node capacity measured in uR units."""
+        cap = self.pool.capacity
+        return Quota(cap.slots, cap.pages).units(self.pool.uR)
+
+    @property
+    def load_fraction(self) -> float:
+        """Allocated fraction of node capacity, in uR units."""
+        total = self.capacity_units
+        return self.pool.used_units / total if total else 1.0
+
+    def load_fraction_after(self, units: int | None = None) -> float:
+        """Projected load fraction after admitting ``units`` (default
+        quota) — the federation placement tier's least-loaded metric:
+        on heterogeneous nodes it steers tenants to the node that ends
+        up least utilised, which plain current-load cannot distinguish
+        while nodes are empty."""
+        total = self.capacity_units
+        used = self.pool.used_units + (
+            self.default_units if units is None else units)
+        return used / total if total else 1.0
 
     def snapshot(self) -> dict[str, dict]:
         return {n: {"units": self.pool.units(n), "priority": st.priority,

@@ -49,6 +49,17 @@ class ResourcePool:
     def tenants(self) -> list[str]:
         return list(self._alloc)
 
+    @property
+    def used_units(self) -> int:
+        """Σ_s R_s in uR units (allocation pressure, for placement)."""
+        return sum(q.units(self.uR) for q in self._alloc.values())
+
+    def can_admit(self, units: int) -> bool:
+        """Feasibility probe: would ``admit`` succeed right now?"""
+        q = Quota(0, 0).add_units(units, self.uR)
+        f = self.free
+        return q.slots <= f.slots and q.pages <= f.pages
+
     # ---- mutations
     def admit(self, tenant: str, units: int) -> Quota:
         if tenant in self._alloc:

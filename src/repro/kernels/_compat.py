@@ -1,0 +1,18 @@
+"""Version compatibility for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+kernels here are written against the new name, so resolve whichever the
+installed jax provides.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+try:
+    CompilerParams = _pltpu.CompilerParams
+except AttributeError:
+    try:
+        CompilerParams = _pltpu.TPUCompilerParams  # pre-rename jax
+    except AttributeError:
+        raise ImportError(
+            "jax.experimental.pallas.tpu provides neither CompilerParams "
+            "nor TPUCompilerParams; this jax version is unsupported by "
+            "the Pallas kernels") from None

@@ -1,2 +1,7 @@
-from repro.sim.workload import GameWorkload, StreamWorkload, Workload  # noqa: F401
-from repro.sim.edgesim import EdgeNodeSim, SimConfig, SimResult  # noqa: F401
+from repro.sim.workload import (GameWorkload, StreamWorkload,  # noqa: F401
+                                Workload, make_game_fleet, make_stream_fleet)
+from repro.sim.edgesim import (EdgeNodeSim, SimConfig,  # noqa: F401
+                               SimResult, tenant_stream)
+from repro.sim.federation import (SWEEP_POLICIES, EdgeFederation,  # noqa: F401
+                                  FederationConfig, FederationResult,
+                                  PlacementEvent, paper_capacity_units)

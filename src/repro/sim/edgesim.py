@@ -1,18 +1,32 @@
 """Edge-node simulator driving the REAL DyverseController (paper §5).
 
-Time-stepped at 1 s. Every ``round_interval`` seconds the controller runs
-Procedure 1 (exactly the code in repro.core). The simulator's actuator
-maps quota units onto the workload latency model; terminated tenants are
-serviced "from the Cloud" with WAN latency added — requests keep flowing,
-as in the paper (users are redirected, not dropped).
+Time advances in round-interval chunks. Every ``round_interval`` seconds
+the controller runs Procedure 1 (exactly the code in repro.core). The
+simulator's actuator maps quota units onto the workload latency model;
+terminated tenants are serviced "from the Cloud" with WAN latency added —
+requests keep flowing, as in the paper (users are redirected, not
+dropped).
 
-Reproduces: Fig. 3 (violation-rate timeline), Figs. 4/5 (violation rate vs
-#tenants × SLO), Figs. 6/7 (latency distributions), and the overhead
+Two execution engines share one trace:
+
+* ``scalar`` — the reference per-second, per-tenant Python loop;
+* ``vectorized`` (default) — batched NumPy over whole chunks: arrival
+  counts, latencies, and SLO accounting are computed per round-interval
+  chunk, with controller rounds replayed at the same boundaries.
+
+Both engines draw the identical random trace per chunk (per-tenant
+arrival counts + jitter, from per-tenant RNG substreams) and evaluate
+the identical floating-point expressions, so their violation rates,
+per-minute timelines, and termination lists are bitwise identical —
+only wall-clock differs.
+
+Reproduces: Fig. 3 (violation-rate timeline), Figs. 4/5 (violation rate
+vs #tenants × SLO), Figs. 6/7 (latency distributions), and the overhead
 measurements of Fig. 2 (controller wall-clock per round).
 """
 from __future__ import annotations
 
-import time
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -23,6 +37,24 @@ from repro.sim.workload import Workload
 
 WAN_EXTRA_LATENCY = 0.12     # s: Cloud round-trip penalty after eviction
 WAN_BW_MBPS = 20.0           # migration bandwidth Edge→Cloud
+CLOUD_UNITS = 10 ** 6        # effectively unconstrained Cloud capacity
+
+ENGINES = ("scalar", "vectorized")
+
+
+def tenant_stream(seed: int, name: str):
+    """Per-tenant RNG substreams, stable across runs and processes
+    (``hash()`` is salted per process, so key on crc32 instead).
+
+    Two independent generators per tenant — one for arrival counts, one
+    for latency jitter. Keeping the draw kinds on separate streams is
+    what lets the scalar engine draw second-by-second and the vectorized
+    engine draw chunk-by-chunk while realising the same values: numpy's
+    Generator consumes its bitstream identically for one size-N draw and
+    for N sequential draws, as long as no other draw kind interleaves."""
+    key = zlib.crc32(name.encode())
+    return (np.random.default_rng((seed, key, 0)),
+            np.random.default_rng((seed, key, 1)))
 
 
 @dataclass
@@ -36,6 +68,7 @@ class SimConfig:
     donation_fraction: float = 0.3    # tenants willing to donate
     pricing: PricingModel = PricingModel.HYBRID
     normalize_factors: bool = False  # beyond-paper mode (see core.priority)
+    engine: str = "vectorized"        # "scalar" reference | "vectorized"
     seed: int = 0
 
 
@@ -50,6 +83,8 @@ class SimResult:
     overhead_scaling_s: list[float] = field(default_factory=list)
     terminated: list[str] = field(default_factory=list)
     migration_s: list[float] = field(default_factory=list)
+    total_requests: int = 0                     # Edge-serviced (Eq. 1 basis)
+    total_violations: int = 0
 
     @property
     def mean_overhead_per_server_s(self) -> float:
@@ -82,10 +117,24 @@ class _SimActuator:
 
 
 class EdgeNodeSim:
-    def __init__(self, workloads: list[Workload], cfg: SimConfig):
+    """One Edge node: a tenant fleet + its DyverseController.
+
+    Drive it either with :meth:`run` (standalone, full duration) or with
+    the chunk API (:meth:`step_chunk` / :meth:`run_controller_round` /
+    :meth:`finalize`) — the latter is how :class:`EdgeFederation`
+    interleaves placement decisions between nodes at round boundaries.
+    """
+
+    def __init__(self, workloads: list[Workload], cfg: SimConfig,
+                 name: str = "edge0"):
+        if cfg.engine not in ENGINES:
+            raise ValueError(f"engine {cfg.engine!r} not in {ENGINES}")
         self.cfg = cfg
+        self.name = name
         self.rng = np.random.default_rng(cfg.seed)
-        self.workloads = {w.name: w for w in workloads}
+        self.workloads: dict[str, Workload] = {}
+        # name → (arrivals Generator, jitter Generator)
+        self.tenant_rngs: dict[str, tuple] = {}
         self.units: dict[str, int] = {}
         self.evicted: set[str] = set()
         self.migration_s: list[float] = []
@@ -98,66 +147,196 @@ class EdgeNodeSim:
             actuator=_SimActuator(self),
             normalize_factors=cfg.normalize_factors,
         )
+        # run-state accumulators (chunk API)
+        self._result = SimResult(policy=cfg.policy, violation_rate=0.0)
+        self._all_lat: list[np.ndarray] = []
+        self._all_slo: list[np.ndarray] = []
+        self._req_s = np.zeros(cfg.duration_s, np.int64)
+        self._viol_s = np.zeros(cfg.duration_s, np.int64)
         for i, w in enumerate(workloads):
-            spec = TenantSpec(
-                name=w.name,
-                slo_latency=cfg.slo_scale * w.base_latency,
-                users=w.users(),
-                donation=(self.rng.random() < cfg.donation_fraction),
-                pricing=cfg.pricing,
-                premium=float(self.rng.random() < 0.25),
-            )
-            res = self.ctrl.admit(spec)
-            if not res.admitted:
-                self.evicted.add(w.name)
+            self.add_tenant(
+                w,
+                donation=bool(self.rng.random() < cfg.donation_fraction),
+                premium=float(self.rng.random() < 0.25))
 
-    def run(self) -> SimResult:
-        cfg = self.cfg
-        res = SimResult(policy=cfg.policy, violation_rate=0.0)
-        all_lat: list[np.ndarray] = []
-        all_slo: list[np.ndarray] = []
-        minute_req = 0
-        minute_viol = 0
+    # ------------------------------------------------------------ tenants
+    def add_tenant(self, wl: Workload, *, donation: bool, premium: float,
+                   spec: TenantSpec | None = None,
+                   tenant_rng: tuple | None = None) -> bool:
+        """Admit a workload to this node. Returns True when the Edge
+        Manager accepted it; rejected tenants are serviced by the Cloud
+        (they stay in ``workloads`` and keep generating requests). A
+        federation passes ``spec``/``tenant_rng`` so a migrated tenant
+        keeps its SLO contract and its random stream across nodes."""
+        if wl.name in self.workloads:
+            raise ValueError(
+                f"tenant {wl.name!r} already hosted on node {self.name}")
+        spec = spec or TenantSpec(
+            name=wl.name,
+            slo_latency=self.cfg.slo_scale * wl.base_latency,
+            users=wl.users(),
+            donation=donation,
+            pricing=self.cfg.pricing,
+            premium=premium,
+        )
+        self.workloads[wl.name] = wl
+        self.tenant_rngs[wl.name] = (
+            tenant_rng if tenant_rng is not None
+            else tenant_stream(self.cfg.seed, wl.name))
+        res = self.ctrl.admit(spec)
+        if not res.admitted:
+            self.evicted.add(wl.name)
+        return res.admitted
 
-        for t in range(cfg.duration_s):
-            for name, wl in self.workloads.items():
-                n = wl.requests_this_second(self.rng, t)
+    def host_cloud_tenant(self, wl: Workload,
+                          tenant_rng: tuple | None = None) -> None:
+        """Attach a workload serviced purely by the Cloud tier: the Edge
+        Manager allocates nothing, but the tenant's requests keep
+        flowing through this node's accounting with WAN latency."""
+        if wl.name in self.workloads:
+            raise ValueError(
+                f"tenant {wl.name!r} already hosted on node {self.name}")
+        self.workloads[wl.name] = wl
+        self.tenant_rngs[wl.name] = (
+            tenant_rng if tenant_rng is not None
+            else tenant_stream(self.cfg.seed, wl.name))
+        self.evicted.add(wl.name)
+
+    def remove_tenant(self, name: str) -> Workload:
+        """Detach an evicted workload (federation re-placement): it stops
+        generating requests here and carries its RNG stream along."""
+        self.evicted.discard(name)
+        self.units.pop(name, None)
+        self.tenant_rngs.pop(name)
+        return self.workloads.pop(name)
+
+    @property
+    def load_fraction(self) -> float:
+        return self.ctrl.load_fraction
+
+    # ------------------------------------------------------------ chunk API
+    def step_chunk(self, t0: int, t1: int) -> None:
+        """Simulate seconds [t0, t1); no controller round in between.
+
+        The scalar engine runs the per-second, per-tenant Python inner
+        loop (per-second RNG draws, latency evaluation and SLO counting,
+        as in the original second-stepped simulator); the vectorized
+        engine realises the same trace with O(1) NumPy calls per tenant.
+        Because each tenant's arrival and jitter draws live on their own
+        Generators, the two call patterns consume the bitstreams
+        identically, and because both engines feed the Monitor identical
+        per-chunk arrays, every downstream quantity — violation rates,
+        per-minute timelines, controller decisions — is bitwise equal."""
+        if self.cfg.engine == "scalar":
+            self._step_chunk_scalar(t0, t1)
+        else:
+            self._step_chunk_vectorized(t0, t1)
+
+    def _tenant_units(self, name: str) -> int:
+        if name in self.evicted:
+            return CLOUD_UNITS
+        return self.units.get(name, self.cfg.default_units)
+
+    def _account_chunk(self, name: str, wl: Workload, lat: np.ndarray,
+                       counts: np.ndarray, slo: float) -> None:
+        """Chunk-level bookkeeping common to both engines: Monitor feed
+        (Eq. 1 + per-round metrics, Edge tenants only) and the
+        user-visible latency distribution (Cloud requests get the WAN
+        penalty but, as in the paper, don't enter Edge SLO accounting)."""
+        if name in self.evicted:
+            if lat.size:
+                self._all_lat.append(lat + WAN_EXTRA_LATENCY)
+                self._all_slo.append(np.full(lat.size, slo))
+            return
+        self.ctrl.monitor.record_batch(
+            name, lat, slo,
+            data_mb=float(counts.sum()) * wl.data_per_request_mb)
+        self.ctrl.monitor.set_users(name, wl.users())
+        if lat.size:
+            self._all_lat.append(lat)
+            self._all_slo.append(np.full(lat.size, slo))
+
+    def _step_chunk_vectorized(self, t0: int, t1: int) -> None:
+        for name, wl in self.workloads.items():
+            arr_rng, jit_rng = self.tenant_rngs[name]
+            counts = wl.arrival_counts(arr_rng, t0, t1)
+            jitter = wl.draw_jitter(jit_rng, int(counts.sum()))
+            slo = self.cfg.slo_scale * wl.base_latency
+            scale = wl.latency_scale(self._tenant_units(name), t0, t1)
+            lat = np.repeat(scale, counts) * jitter
+            self._account_chunk(name, wl, lat, counts, slo)
+            if name in self.evicted:
+                continue
+            # per-second violation counts for the per-minute timeline:
+            # reduceat over the seconds that actually saw requests (empty
+            # seconds contribute no elements, so consecutive non-empty
+            # offsets delimit exactly one second's requests)
+            nz = counts > 0
+            if nz.any():
+                off = np.zeros(counts.size, np.int64)
+                np.cumsum(counts[:-1], out=off[1:])
+                viol = np.add.reduceat((lat > slo).astype(np.int64), off[nz])
+                self._viol_s[t0:t1][nz] += viol
+            self._req_s[t0:t1] += counts
+
+    def _step_chunk_scalar(self, t0: int, t1: int) -> None:
+        """Reference engine: the per-second, per-tenant Python inner loop
+        — per-second arrival draw, jitter draw, latency-model evaluation
+        and SLO counting, exactly the structure (and cost profile) of the
+        original 1 s-resolution simulator."""
+        for name, wl in self.workloads.items():
+            arr_rng, jit_rng = self.tenant_rngs[name]
+            units = self._tenant_units(name)
+            evicted = name in self.evicted
+            slo = self.cfg.slo_scale * wl.base_latency
+            counts = np.zeros(t1 - t0, np.int64)
+            parts = []
+            for t in range(t0, t1):
+                n = wl.requests_this_second(arr_rng, t)
                 if n == 0:
                     continue
-                slo = cfg.slo_scale * wl.base_latency
-                if name in self.evicted:
-                    # serviced by the Cloud server: base latency + WAN
-                    lat = (wl.latencies(self.rng, n, units=10**6, t=t)
-                           + WAN_EXTRA_LATENCY)
-                    # Cloud requests are not the Edge node's SLO accounting
-                    # (paper Eq. 1 is over Edge servers) but count for the
-                    # user-visible latency distribution:
-                    all_lat.append(lat)
-                    all_slo.append(np.full(n, slo))
-                    continue
-                units = self.units.get(name, cfg.default_units)
-                lat = wl.latencies(self.rng, n, units, t=t)
-                self.ctrl.monitor.record_batch(
-                    name, lat, slo, data_mb=n * wl.data_per_request_mb)
-                self.ctrl.monitor.set_users(name, wl.users())
-                all_lat.append(lat)
-                all_slo.append(np.full(n, slo))
-                minute_req += n
-                minute_viol += int((lat > slo).sum())
+                lat_t = wl.latencies(jit_rng, n, units, t=t)
+                counts[t - t0] = n
+                parts.append(lat_t)
+                if not evicted:
+                    self._req_s[t] += n
+                    self._viol_s[t] += int((lat_t > slo).sum())
+            lat = np.concatenate(parts) if parts else np.empty(0)
+            self._account_chunk(name, wl, lat, counts, slo)
 
-            if (t + 1) % 60 == 0:
-                res.per_minute_vr.append(minute_viol / max(minute_req, 1))
-                minute_req = minute_viol = 0
+    def run_controller_round(self):
+        """One Procedure-1 round; records overheads and terminations."""
+        report = self.ctrl.run_round()
+        self._result.overhead_priority_s.append(report.priority_update_s)
+        self._result.overhead_scaling_s.append(report.scaling_s)
+        self._result.terminated.extend(report.terminated)
+        return report
 
-            if cfg.policy != "none" and (t + 1) % cfg.round_interval == 0 \
-                    and (t + 1) < cfg.duration_s:
-                report = self.ctrl.run_round()
-                res.overhead_priority_s.append(report.priority_update_s)
-                res.overhead_scaling_s.append(report.scaling_s)
-                res.terminated.extend(report.terminated)
-
+    def finalize(self) -> SimResult:
+        res = self._result
         res.violation_rate = self.ctrl.node_violation_rate
-        res.latencies = (np.concatenate(all_lat) if all_lat else np.empty(0))
-        res.slos = (np.concatenate(all_slo) if all_slo else np.empty(0))
+        res.total_requests = self.ctrl.monitor.total_requests
+        res.total_violations = self.ctrl.monitor.total_violations
+        for m in range(self.cfg.duration_s // 60):
+            req = int(self._req_s[m * 60:(m + 1) * 60].sum())
+            viol = int(self._viol_s[m * 60:(m + 1) * 60].sum())
+            res.per_minute_vr.append(viol / max(req, 1))
+        res.latencies = (np.concatenate(self._all_lat)
+                         if self._all_lat else np.empty(0))
+        res.slos = (np.concatenate(self._all_slo)
+                    if self._all_slo else np.empty(0))
         res.migration_s = self.migration_s
         return res
+
+    # ------------------------------------------------------------ standalone
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        t = 0
+        while t < cfg.duration_s:
+            t1 = min(t + cfg.round_interval, cfg.duration_s)
+            self.step_chunk(t, t1)
+            if cfg.policy != "none" and t1 % cfg.round_interval == 0 \
+                    and t1 < cfg.duration_s:
+                self.run_controller_round()
+            t = t1
+        return self.finalize()

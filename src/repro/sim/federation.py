@@ -1,0 +1,234 @@
+"""Edge federation: N DYVERSE nodes + a placement tier + a Cloud tier.
+
+Mapping onto the paper's architecture (§2, Fig. 1): each
+:class:`EdgeNodeSim` owns one *Edge Manager* (the ``DyverseController``
+with its Monitor, priority manager and auto-scaler — Procedures 1–3,
+unchanged). The paper evaluates a single node; here a thin federation
+tier plays the role the *Cloud Manager* plays at deployment time, for a
+whole fleet of nodes:
+
+* **Placement** — when a tenant is offloaded, the federation admits it
+  to the least-loaded node (smallest projected allocated-units
+  fraction, via ``DyverseController.load_fraction_after``) among those
+  with free capacity for the default quota (``can_admit``). This is the
+  "which Edge node hosts the server" decision the paper defers to the
+  Cloud Manager.
+* **Re-placement** — when a node's Procedure 3 terminates a tenant
+  (eviction under contention), the federation first tries to migrate it
+  to a sibling Edge node with spare capacity, and only falls back to
+  the Cloud tier when no node fits. This follows Baktir et al.
+  (*Addressing the Challenges in Federating Edge Resources*): federated
+  Edge resources absorb each other's overflow before the WAN is paid.
+* **Cloud tier** — tenants nowhere placeable are serviced by the origin
+  Cloud server with ``WAN_EXTRA_LATENCY`` added per request, exactly as
+  the single-node simulator treats terminated tenants (users are
+  redirected, never dropped).
+
+All nodes advance in lockstep, one round-interval chunk at a time, so
+re-placement happens at the same boundaries where Procedure 1 runs.
+Federation-level SLO accounting (Eq. 1 aggregated over nodes) is the
+request-weighted mean of the per-node violation rates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import POLICIES, PricingModel, TenantSpec
+from repro.sim.edgesim import EdgeNodeSim, SimConfig, SimResult, tenant_stream
+from repro.sim.workload import Workload
+
+# the no-scaling baseline + the four priority policies (Figs. 3–5 sweeps)
+SWEEP_POLICIES = ("none",) + POLICIES
+
+
+def paper_capacity_units(tenants: int, n_nodes: int = 1,
+                         headroom: int = 0) -> int:
+    """Paper §5 node capacity (490 uR for 32 tenants), scaled to the
+    tenant count, split across federation nodes, plus optional headroom
+    so re-placement has somewhere to go."""
+    return int(490 * tenants / 32 / n_nodes) + headroom
+
+
+@dataclass
+class FederationConfig:
+    n_nodes: int = 4
+    duration_s: int = 1200
+    round_interval: int = 300
+    capacity_units: int = 520          # per node, unless node_capacities
+    node_capacities: list[int] | None = None   # heterogeneous override
+    default_units: int = 16
+    policy: str = "sdps"
+    slo_scale: float = 1.0
+    donation_fraction: float = 0.3
+    pricing: PricingModel = PricingModel.HYBRID
+    normalize_factors: bool = False
+    engine: str = "vectorized"
+    seed: int = 0
+
+    def node_sim_config(self, i: int) -> SimConfig:
+        caps = self.node_capacities
+        return SimConfig(
+            duration_s=self.duration_s,
+            round_interval=self.round_interval,
+            capacity_units=caps[i] if caps else self.capacity_units,
+            default_units=self.default_units,
+            policy=self.policy,
+            slo_scale=self.slo_scale,
+            donation_fraction=self.donation_fraction,
+            pricing=self.pricing,
+            normalize_factors=self.normalize_factors,
+            engine=self.engine,
+            seed=self.seed,
+        )
+
+
+@dataclass
+class PlacementEvent:
+    t: int                      # simulated second of the decision
+    tenant: str
+    node: str | None            # None → Cloud tier
+    kind: str                   # "admit" | "replace" | "cloud"
+    source: str | None = None   # node the tenant was evicted from
+
+
+@dataclass
+class FederationResult:
+    policy: str
+    node_results: dict[str, SimResult]
+    violation_rate: float       # Eq. 1 aggregated across all Edge nodes
+    total_requests: int
+    total_violations: int
+    placements: list[PlacementEvent] = field(default_factory=list)
+    replaced: list[str] = field(default_factory=list)   # moved node→node
+    cloud: list[str] = field(default_factory=list)      # ended on the Cloud
+
+    @property
+    def per_node_vr(self) -> dict[str, float]:
+        return {n: r.violation_rate for n, r in self.node_results.items()}
+
+    @property
+    def mean_round_overhead_s(self) -> dict[str, float]:
+        return {n: r.mean_overhead_per_server_s
+                for n, r in self.node_results.items()}
+
+
+class EdgeFederation:
+    def __init__(self, workloads: list[Workload], cfg: FederationConfig):
+        self.cfg = cfg
+        self.nodes = [
+            EdgeNodeSim([], cfg.node_sim_config(i), name=f"edge{i}")
+            for i in range(cfg.n_nodes)
+        ]
+        self.placements: list[PlacementEvent] = []
+        self.replaced: list[str] = []
+        names = [wl.name for wl in workloads]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate tenant names in federation fleet")
+        rng = np.random.default_rng(cfg.seed)
+        # spec draws happen federation-side, in tenant order, so placement
+        # choices never perturb another tenant's donation/premium roll
+        for wl in workloads:
+            donation = bool(rng.random() < cfg.donation_fraction)
+            premium = float(rng.random() < 0.25)
+            self._place(wl, donation=donation, premium=premium, t=0)
+
+    # ---------------------------------------------------------- placement
+    def _feasible_nodes(self, exclude: EdgeNodeSim | None = None):
+        cands = [n for n in self.nodes
+                 if n is not exclude and n.ctrl.can_admit()]
+        return sorted(cands,
+                      key=lambda n: (n.ctrl.load_fraction_after(), n.name))
+
+    def _place(self, wl: Workload, *, donation: bool, premium: float,
+               t: int, spec: TenantSpec | None = None, tenant_rng=None,
+               source: str | None = None,
+               prior_age: int = 0) -> EdgeNodeSim | None:
+        kind = "admit" if source is None else "replace"
+        # a tenant Procedure 3 just evicted must go to a SIBLING node —
+        # the source freed its units, so it would otherwise re-admit the
+        # tenant it terminated and churn
+        src_node = next((n for n in self.nodes if n.name == source), None)
+        feasible = self._feasible_nodes(exclude=src_node)
+        if feasible:
+            node = feasible[0]
+            if prior_age:
+                # seed BEFORE admit: ctrl.admit builds the TenantState
+                # from its history, so the refugee keeps its Age_s credit
+                node.ctrl.remember_age(wl.name, prior_age)
+            if not node.add_tenant(wl, donation=donation, premium=premium,
+                                   spec=spec, tenant_rng=tenant_rng):
+                # can_admit() and admit() test the same capacity condition
+                # and nothing runs in between — a refusal is a bug
+                raise RuntimeError(
+                    f"admit refused on feasible node {node.name}")
+            self.placements.append(PlacementEvent(
+                t=t, tenant=wl.name, node=node.name, kind=kind,
+                source=source))
+            if source is not None:
+                self.replaced.append(wl.name)
+            return node
+        # Cloud tier: host on the source node (or node 0) as an evicted
+        # tenant — requests keep flowing with WAN latency
+        host = src_node or self.nodes[0]
+        host.host_cloud_tenant(wl, tenant_rng=tenant_rng)
+        self.placements.append(PlacementEvent(
+            t=t, tenant=wl.name, node=None, kind="cloud", source=source))
+        return None
+
+    def _replace_terminated(self, node: EdgeNodeSim, terminated: list[str],
+                            t: int) -> None:
+        for name in terminated:
+            age = node.ctrl.prior_age(name)   # Age_s carries over
+            wl = node.workloads[name]
+            rng = node.tenant_rngs[name]
+            node.remove_tenant(name)
+            spec = TenantSpec(
+                name=name,
+                slo_latency=node.cfg.slo_scale * wl.base_latency,
+                users=wl.users(),
+                donation=False,     # a migrated refugee no longer donates
+                pricing=node.cfg.pricing,
+                premium=0.0,        # premium was spent on the first node
+            )
+            self._place(wl, donation=False, premium=0.0, t=t, spec=spec,
+                        tenant_rng=rng, source=node.name, prior_age=age)
+
+    # ---------------------------------------------------------- execution
+    def run(self) -> FederationResult:
+        cfg = self.cfg
+        t = 0
+        while t < cfg.duration_s:
+            t1 = min(t + cfg.round_interval, cfg.duration_s)
+            for node in self.nodes:
+                node.step_chunk(t, t1)
+            if cfg.policy != "none" and t1 % cfg.round_interval == 0 \
+                    and t1 < cfg.duration_s:
+                # all Procedure-1 rounds first, re-placement after: a
+                # refugee must never land on a sibling whose round at
+                # this same boundary hasn't run yet (it would be scaled
+                # down / evictable with zero requests on the books, and
+                # outcomes would depend on node iteration order)
+                reports = [(n, n.run_controller_round())
+                           for n in self.nodes]
+                for node, report in reports:
+                    self._replace_terminated(node, report.terminated, t1)
+            t = t1
+        return self._finalize()
+
+    def _finalize(self) -> FederationResult:
+        node_results = {n.name: n.finalize() for n in self.nodes}
+        total_req = sum(r.total_requests for r in node_results.values())
+        total_viol = sum(r.total_violations for r in node_results.values())
+        cloud = sorted({n for node in self.nodes for n in node.evicted})
+        return FederationResult(
+            policy=self.cfg.policy,
+            node_results=node_results,
+            violation_rate=total_viol / total_req if total_req else 0.0,
+            total_requests=total_req,
+            total_violations=total_viol,
+            placements=self.placements,
+            replaced=self.replaced,
+            cloud=cloud,
+        )

@@ -14,6 +14,20 @@ Latency model (per request, given the tenant's allocated units):
 with capacity = units · unit_rate and lognormal jitter. Under-provisioned
 tenants queue (ρ>1) and blow through their SLO; over-provisioned tenants
 sit at base latency — exactly the regime DYVERSE redistributes.
+
+Chunked API: the simulator consumes whole round-intervals at a time.
+``arrival_counts`` returns per-second request counts for a [t0, t1)
+window, ``latency_scale`` the per-second deterministic latency factor,
+and ``draw_jitter`` the per-request multiplicative noise.
+
+The scalar engine calls ``requests_this_second``/``draw_jitter`` once
+per second; the vectorized engine calls ``arrival_counts``/
+``draw_jitter`` once per chunk. On a ``numpy.random.Generator`` a
+vector draw consumes the bitstream exactly like the equivalent sequence
+of scalar draws (elementwise generation, no cached state), so as long
+as each kind of draw has its own Generator the two call patterns yield
+bitwise-identical traces — which is what makes the two engines agree
+exactly.
 """
 from __future__ import annotations
 
@@ -33,31 +47,48 @@ class Workload:
     data_per_request_mb: float = 0.005
     migration_mb: float = 0.0      # state migrated to Cloud on termination
 
-    def requests_this_second(self, rng: np.random.Generator, t: int) -> int:
-        raise NotImplementedError
-
-    def users(self) -> int:
-        return 1
-
     # a well-provisioned server services in ~0.72·base — under the SLO, below
     # the dThr=0.8 scale-down threshold; moderately loaded tenants sit in
     # the (0.8·SLO, SLO] donation band
     provisioned_factor: float = 0.72
 
-    def demand_rate(self, t: int) -> float:
-        """Expected work/s at time t (drives queueing, not the lumpy
-        per-second arrival count)."""
+    def users(self) -> int:
+        return 1
+
+    # ---- chunked interface (simulator hot path) -------------------------
+    def arrival_counts(self, rng: np.random.Generator, t0: int,
+                       t1: int) -> np.ndarray:
+        """Per-second request counts for seconds [t0, t1), shape (t1-t0,)."""
         raise NotImplementedError
+
+    def demand_rates(self, t0: int, t1: int) -> np.ndarray:
+        """Expected work/s for each second in [t0, t1) (drives queueing,
+        not the lumpy per-second arrival count)."""
+        raise NotImplementedError
+
+    def latency_scale(self, units: int, t0: int, t1: int) -> np.ndarray:
+        """Deterministic per-second latency factor: base·pf·max(1,ρ)^α."""
+        capacity = max(units, 1) * self.unit_rate
+        rho = self.demand_rates(t0, t1) / capacity
+        return (self.base_latency * self.provisioned_factor
+                * np.maximum(1.0, rho) ** self.alpha)
+
+    def draw_jitter(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.lognormal(0.0, self.jitter_sigma, size=n)
+
+    # ---- scalar forms (reference engine, unit tests) --------------------
+    def requests_this_second(self, rng: np.random.Generator, t: int) -> int:
+        return int(self.arrival_counts(rng, t, t + 1)[0])
+
+    def demand_rate(self, t: int) -> float:
+        return float(self.demand_rates(t, t + 1)[0])
 
     def latencies(self, rng: np.random.Generator, n: int, units: int,
                   t: int = 0) -> np.ndarray:
         if n == 0:
             return np.empty(0)
-        capacity = max(units, 1) * self.unit_rate
-        rho = self.demand_rate(t) / capacity
-        jit = rng.lognormal(0.0, self.jitter_sigma, size=n)
-        return (self.base_latency * self.provisioned_factor
-                * max(1.0, rho) ** self.alpha * jit)
+        scale = self.latency_scale(units, t, t + 1)[0]
+        return scale * self.draw_jitter(rng, n)
 
 
 @dataclass
@@ -74,17 +105,21 @@ class GameWorkload(Workload):
         self.data_per_request_mb = 0.005
         self.migration_mb = 0.05 * self.n_users  # user sessions move to Cloud
 
-    def _phase(self, t: int) -> float:
-        return 1.0 + self.burst_amp * np.sin(2 * np.pi * t / self.burst_period
-                                             + self.n_users)
+    def _phase(self, t) -> np.ndarray:
+        return 1.0 + self.burst_amp * np.sin(
+            2 * np.pi * np.asarray(t, np.float64) / self.burst_period
+            + self.n_users)
 
-    def requests_this_second(self, rng: np.random.Generator, t: int) -> int:
-        lam = self.n_users * self.rate_per_user * max(self._phase(t), 0.05)
-        return int(rng.poisson(lam))
+    def _lam(self, t0: int, t1: int) -> np.ndarray:
+        phase = np.maximum(self._phase(np.arange(t0, t1)), 0.05)
+        return self.n_users * self.rate_per_user * phase
 
-    def demand_rate(self, t: int) -> float:
-        return (self.n_users * self.rate_per_user * max(self._phase(t), 0.05)
-                * self.work_per_request)
+    def arrival_counts(self, rng: np.random.Generator, t0: int,
+                       t1: int) -> np.ndarray:
+        return rng.poisson(self._lam(t0, t1)).astype(np.int64)
+
+    def demand_rates(self, t0: int, t1: int) -> np.ndarray:
+        return self._lam(t0, t1) * self.work_per_request
 
     def users(self) -> int:
         return self.n_users
@@ -92,23 +127,24 @@ class GameWorkload(Workload):
 
 @dataclass
 class StreamWorkload(Workload):
-    """FD-like: single source, fps in [0.1, 1]; fractional fps accumulates."""
+    """FD-like: single source, fps in [0.1, 1]; fractional fps accumulates
+    across seconds. Arrivals are the stateless closed form
+    ``n_t = ⌊fps·(t+1)⌋ − ⌊fps·t⌋`` so any [t0, t1) chunking of the
+    timeline yields the identical frame schedule."""
 
     fps: float = 0.5
-    _acc: float = field(default=0.0, repr=False)
 
     def __post_init__(self):
         self.data_per_request_mb = 0.6     # one grey-scale frame
         self.migration_mb = 0.0            # paper: no data migrated for FD
 
-    def requests_this_second(self, rng: np.random.Generator, t: int) -> int:
-        self._acc += self.fps
-        n = int(self._acc)
-        self._acc -= n
-        return n
+    def arrival_counts(self, rng: np.random.Generator, t0: int,
+                       t1: int) -> np.ndarray:
+        frames = np.floor(self.fps * np.arange(t0, t1 + 1))
+        return np.diff(frames).astype(np.int64)
 
-    def demand_rate(self, t: int) -> float:
-        return self.fps * self.work_per_request
+    def demand_rates(self, t0: int, t1: int) -> np.ndarray:
+        return np.full(t1 - t0, self.fps * self.work_per_request)
 
     def users(self) -> int:
         return 1

@@ -1,0 +1,100 @@
+"""Test-suite bootstrap.
+
+Some property tests use `hypothesis`, which is not part of the runtime
+dependency set. When the real package is installed it is used untouched;
+otherwise a minimal deterministic random-sampling fallback is installed
+into ``sys.modules`` before collection, so the suite still collects and
+the property tests still exercise their invariants (without hypothesis'
+shrinking or edge-case heuristics).
+
+The fallback implements exactly the API surface the tests use:
+``given`` (positional and keyword strategies), ``settings(max_examples,
+deadline)``, and ``strategies.{integers,floats,booleans,sampled_from,
+lists,tuples}``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_FALLBACK_SEED = 0xD75E  # deterministic: same examples on every run
+_MAX_EXAMPLES_CAP = 100  # no shrinking → keep runtime bounded
+
+
+def _install_hypothesis_fallback() -> None:
+    class Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda r: r.randint(min_value, max_value))
+
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               **_kw) -> Strategy:
+        return Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def booleans() -> Strategy:
+        return Strategy(lambda r: r.random() < 0.5)
+
+    def sampled_from(elements) -> Strategy:
+        pool = list(elements)
+        return Strategy(lambda r: pool[r.randrange(len(pool))])
+
+    def lists(elem: Strategy, min_size: int = 0,
+              max_size: int = 10) -> Strategy:
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elem.example(r) for _ in range(n)]
+        return Strategy(draw)
+
+    def tuples(*elems: Strategy) -> Strategy:
+        return Strategy(lambda r: tuple(e.example(r) for e in elems))
+
+    def settings(max_examples: int = 25, deadline=None, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strats: Strategy, **kw_strats: Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_fallback_max_examples",
+                            getattr(fn, "_fallback_max_examples", 25))
+                rnd = random.Random(_FALLBACK_SEED)
+                for _ in range(min(n, _MAX_EXAMPLES_CAP)):
+                    drawn = [s.example(rnd) for s in arg_strats]
+                    kdrawn = {k: s.example(rnd)
+                              for k, s in kw_strats.items()}
+                    fn(*args, *drawn, **kwargs, **kdrawn)
+            # The strategies fully supply the test's parameters; hide the
+            # original signature so pytest doesn't look for fixtures named
+            # after them.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = "Minimal fallback shim installed by tests/conftest.py."
+    strategies = types.ModuleType("hypothesis.strategies")
+    for fn in (integers, floats, booleans, sampled_from, lists, tuples):
+        setattr(strategies, fn.__name__, fn)
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strategies
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_fallback()

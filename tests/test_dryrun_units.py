@@ -82,7 +82,7 @@ def test_input_specs_defined_for_all_applicable_shapes(arch):
             continue
         specs = model.input_specs(shape)
         assert specs, f"{arch}/{shape.name}: empty specs"
-        for name, sds in jax.tree.leaves_with_path(specs):
+        for name, sds in jax.tree_util.tree_leaves_with_path(specs):
             assert 0 not in sds.shape
         if shape.kind == "decode":
             assert "cache" in specs and "token" in specs

@@ -1,0 +1,131 @@
+"""Federation layer: placement, eviction re-placement, Cloud fallback,
+and federation-level SLO accounting."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.types import RoundReport
+from repro.sim import EdgeFederation, FederationConfig
+from repro.sim.workload import GameWorkload, make_game_fleet
+
+
+def game(name, users=50):
+    return GameWorkload(name=name, base_latency=0.078, work_per_request=1.0,
+                        unit_rate=2.05, n_users=users, rate_per_user=0.5)
+
+
+def small_fed(n_nodes=2, capacity=64, tenants=0, **kw) -> EdgeFederation:
+    cfg = FederationConfig(n_nodes=n_nodes, capacity_units=capacity,
+                           duration_s=240, round_interval=120,
+                           default_units=16, policy="sdps", seed=3, **kw)
+    fleet = [game(f"g{i}") for i in range(tenants)]
+    return EdgeFederation(fleet, cfg)
+
+
+# ------------------------------------------------------------- placement
+def test_placement_fills_least_loaded_node_first():
+    fed = small_fed(n_nodes=3, capacity=64, tenants=6)
+    by_tenant = {e.tenant: e.node for e in fed.placements}
+    # equal capacities, equal quotas: tenants must round-robin the nodes
+    assert [by_tenant[f"g{i}"] for i in range(6)] == [
+        "edge0", "edge1", "edge2", "edge0", "edge1", "edge2"]
+    loads = [n.load_fraction for n in fed.nodes]
+    assert max(loads) == min(loads)
+
+
+def test_placement_prefers_emptier_heterogeneous_node():
+    fed = small_fed(n_nodes=2, tenants=1,
+                    node_capacities=[32, 320])
+    # 16/320 = 5% beats 16/32 = 50%: the big node is the least loaded
+    assert fed.placements[0].node == "edge1"
+
+
+def test_duplicate_tenant_names_rejected():
+    cfg = FederationConfig(n_nodes=2, capacity_units=64, seed=0)
+    with pytest.raises(ValueError, match="duplicate"):
+        EdgeFederation([game("dup"), game("dup")], cfg)
+
+
+def test_admission_overflow_goes_to_cloud():
+    # each node fits exactly two 16-unit tenants; the fifth has no home
+    fed = small_fed(n_nodes=2, capacity=32, tenants=5)
+    kinds = [e.kind for e in fed.placements]
+    assert kinds == ["admit"] * 4 + ["cloud"]
+    assert fed.placements[-1].node is None
+
+
+# ------------------------------------------------------- re-placement
+def _terminate_on(fed, node, name):
+    """Drive Procedure 3 directly: terminate + federation re-placement."""
+    report = RoundReport(policy=node.cfg.policy)
+    node.ctrl._terminate(name, report, reason="test eviction")
+    fed._replace_terminated(node, report.terminated, t=120)
+
+
+def test_evicted_tenant_replaced_on_sibling_with_capacity():
+    fed = small_fed(n_nodes=2, capacity=64, tenants=3)
+    a, b = fed.nodes
+    victim = next(iter(a.ctrl.registry))
+    _terminate_on(fed, a, victim)
+    # node a freed the units, but the refugee must land on the sibling
+    assert victim not in a.workloads
+    assert victim in b.ctrl.registry and victim not in b.evicted
+    # Procedure 3 bumped Age_s on the source; the ageing credit must
+    # reach the refugee's live priority state on the target (Eq. 2)
+    assert b.ctrl.registry[victim].age >= 1
+    ev = fed.placements[-1]
+    assert (ev.kind, ev.source, ev.node) == ("replace", "edge0", "edge1")
+    assert victim in fed.replaced
+
+
+def test_evicted_tenant_falls_back_to_cloud_when_no_sibling_fits():
+    # both nodes exactly full: the sibling cannot admit the refugee
+    fed = small_fed(n_nodes=2, capacity=32, tenants=4)
+    a = fed.nodes[0]
+    victim = next(iter(a.ctrl.registry))
+    _terminate_on(fed, a, victim)
+    ev = fed.placements[-1]
+    assert (ev.kind, ev.node) == ("cloud", None)
+    # cloud tenants keep generating requests on the source node, WAN-served
+    assert victim in a.workloads and victim in a.evicted
+    assert victim not in fed.replaced
+
+
+def test_replacement_happens_in_real_runs():
+    rng = np.random.default_rng(42)
+    cfg = FederationConfig(n_nodes=4, duration_s=600, round_interval=150,
+                           capacity_units=130, policy="sdps", seed=1)
+    fed = EdgeFederation(make_game_fleet(32, rng), cfg)
+    res = fed.run()
+    assert res.replaced, "expected Procedure 3 evictions to re-place"
+    for ev in res.placements:
+        if ev.kind == "replace":
+            assert ev.node != ev.source
+
+
+# ------------------------------------------------------- SLO accounting
+def test_federation_vr_is_request_weighted_mean_of_node_rates():
+    rng = np.random.default_rng(42)
+    cfg = FederationConfig(n_nodes=3, duration_s=480, round_interval=120,
+                           capacity_units=200, policy="sps", seed=9)
+    res = EdgeFederation(make_game_fleet(24, rng), cfg).run()
+    weighted = sum(r.violation_rate * r.total_requests
+                   for r in res.node_results.values())
+    total = sum(r.total_requests for r in res.node_results.values())
+    assert total == res.total_requests
+    assert res.violation_rate == pytest.approx(weighted / total, rel=1e-12)
+
+
+def test_federation_engines_agree():
+    def run(engine):
+        rng = np.random.default_rng(42)
+        cfg = FederationConfig(n_nodes=2, duration_s=360, round_interval=120,
+                               capacity_units=130, policy="sdps", seed=4,
+                               engine=engine)
+        return EdgeFederation(make_game_fleet(16, rng), cfg).run()
+
+    s, v = run("scalar"), run("vectorized")
+    assert v.violation_rate == s.violation_rate
+    assert v.per_node_vr == s.per_node_vr
+    assert v.replaced == s.replaced and v.cloud == s.cloud

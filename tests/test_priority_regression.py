@@ -1,0 +1,112 @@
+"""Hypothesis-free regression pins for the priority equations (Eqs. 2–6).
+
+Every value below is hand-computed from the paper's equations with the
+default all-ones weights, so a behaviour change in ``repro.core.priority``
+fails loudly even in environments where the property tests are skipped.
+Also asserts the vectorised ``batch_scores`` agrees with the scalar
+``priority_score`` elementwise for all four policies and both pricing
+branches (additive PFR/Hybrid vs reciprocal PFP).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (POLICIES, PricingModel, TenantSpec, TenantState,
+                        batch_scores, priority_score)
+from repro.core.priority import cdps, sdps, sps, wdps
+from repro.core.types import Quota
+
+
+def mk_state(ordinal=1, premium=0.0, age=0, loyalty=0, scale=0, reward=0,
+             pricing=PricingModel.HYBRID):
+    spec = TenantSpec(name="t", slo_latency=0.1, premium=premium,
+                      pricing=pricing)
+    st = TenantState(spec=spec, ordinal=ordinal, quota=Quota(4, 32))
+    st.age, st.loyalty = age, loyalty
+    st.scale_count, st.reward_count = scale, reward
+    return st
+
+
+# ------------------------------------------------------- hand-computed pins
+def test_sps_eq2_pin():
+    st = mk_state(ordinal=4, premium=1.0, age=2, loyalty=3)
+    # P + 1/ID + Age + Loyalty = 1 + 0.25 + 2 + 3
+    assert sps(st) == pytest.approx(6.25)
+
+
+def test_wdps_eq3_additive_pin():
+    st = mk_state(ordinal=4, premium=1.0, age=2, loyalty=3,
+                  pricing=PricingModel.PFR)
+    # base 6.25 + Request 20 + Users 7 + Data 1.5
+    assert wdps(st, 20, 7, 1.5) == pytest.approx(34.75)
+
+
+def test_wdps_eq4_reciprocal_pin():
+    st = mk_state(ordinal=4, premium=1.0, age=2, loyalty=3,
+                  pricing=PricingModel.PFP)
+    # base 6.25 + 1/20 + 1/7 + 1/1.5
+    assert wdps(st, 20, 7, 1.5) == pytest.approx(
+        6.25 + 0.05 + 1 / 7 + 1 / 1.5)
+
+
+def test_wdps_eq4_zero_factors_take_max_bonus():
+    st = mk_state(pricing=PricingModel.PFP)
+    # x=0 is undefined in the paper; we clamp to 1/(W·max(x,1)) = 1 each
+    assert wdps(st, 0, 0, 0.0) == pytest.approx(sps(st) + 3.0)
+
+
+def test_cdps_eq5_pin():
+    st = mk_state(ordinal=4, premium=1.0, age=2, loyalty=3, reward=2,
+                  pricing=PricingModel.PFR)
+    # wdps 34.75 + Reward 2
+    assert cdps(st, 20, 7, 1.5) == pytest.approx(36.75)
+
+
+def test_sdps_eq6_pin():
+    st = mk_state(ordinal=4, premium=1.0, age=2, loyalty=3, reward=2,
+                  scale=5, pricing=PricingModel.PFR)
+    # cdps 36.75 + 1/Scale = 1/5
+    assert sdps(st, 20, 7, 1.5) == pytest.approx(36.95)
+
+
+def test_sdps_never_scaled_gets_full_bonus():
+    a = mk_state(scale=0)
+    b = mk_state(scale=1)
+    # max(Scale,1) clamp: 0 and 1 scalings both get the 1/1 bonus
+    assert sdps(a, 5, 5, 5) == pytest.approx(sdps(b, 5, 5, 5))
+
+
+# ------------------------------------------- batch_scores == priority_score
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("pricing", [PricingModel.PFR, PricingModel.PFP,
+                                     PricingModel.HYBRID])
+def test_batch_scores_matches_scalar_elementwise(policy, pricing):
+    rng = np.random.default_rng(12)
+    n = 16
+    states = [
+        mk_state(ordinal=i + 1,
+                 premium=float(rng.random() < 0.5),
+                 age=int(rng.integers(0, 4)),
+                 loyalty=int(rng.integers(0, 6)),
+                 scale=int(rng.integers(0, 5)),
+                 reward=int(rng.integers(0, 3)),
+                 pricing=pricing)
+        for i in range(n)
+    ]
+    requests = rng.integers(0, 2000, n).astype(float)
+    users = rng.integers(0, 100, n).astype(float)
+    data_mb = rng.uniform(0.0, 50.0, n)
+
+    expect = [priority_score(policy, st, requests[i], users[i], data_mb[i])
+              for i, st in enumerate(states)]
+    got = np.asarray(batch_scores(
+        policy,
+        [st.spec.premium for st in states],
+        [st.ordinal for st in states],
+        [st.age for st in states],
+        [st.loyalty for st in states],
+        requests, users, data_mb,
+        [st.reward_count for st in states],
+        [st.scale_count for st in states],
+        [st.spec.pricing == PricingModel.PFP for st in states]))
+    # batch path runs in float32 on-device — elementwise up to that precision
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-4)
