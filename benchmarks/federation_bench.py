@@ -1,12 +1,15 @@
-"""Federation benchmarks: engine speedup + multi-node policy sweep.
+"""Federation benchmarks: engine trio speedup + multi-node policy sweep
++ fleet-scale (≥1M tenant-second) batched-engine sweep.
 
-``engine_speedup`` measures the vectorized chunk engine against the
-scalar per-second reference loop on the paper's 32-tenant / 1200 s
-scenario (both realise the identical trace, so the comparison is pure
-execution-engine overhead). ``federation_sweep`` runs a 4-node × 32-
-tenant federation across all five policies and reports per-node round
-overhead (the paper's sub-second claim, Fig. 2) plus federation-level
-violation rates and placement churn.
+``engine_speedup`` measures all three execution engines on the paper's
+32-tenant / 1200 s scenario (identical seeded trace, so the comparison
+is pure execution-engine overhead). ``federation_sweep`` runs a 4-node
+federation across all five policies and reports per-node round overhead
+(the paper's sub-second claim, Fig. 2) plus federation-level violation
+rates and placement churn. ``fleet_scale_sweep`` pushes 4-node
+federations to ≥1M tenant-seconds and records batched-vs-vectorized
+throughput; walls are min-of-``repeats`` because shared-host timing
+noise here swings single runs several-fold.
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ import numpy as np
 
 from repro.sim import (SWEEP_POLICIES, EdgeFederation, EdgeNodeSim,
                        FederationConfig, SimConfig, paper_capacity_units)
-from repro.sim.workload import make_game_fleet
+from repro.sim.workload import make_game_fleet, make_stream_fleet
 
 
 def _sim(engine: str, tenants: int, duration: int, seed: int) -> EdgeNodeSim:
@@ -28,27 +31,37 @@ def _sim(engine: str, tenants: int, duration: int, seed: int) -> EdgeNodeSim:
 
 
 def engine_speedup(tenants: int = 32, duration: int = 1200,
-                   seed: int = 7) -> dict:
-    """Scalar-vs-vectorized wall clock on the identical seeded trace."""
-    t0 = time.perf_counter()
-    rs = _sim("scalar", tenants, duration, seed).run()
-    scalar_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    rv = _sim("vectorized", tenants, duration, seed).run()
-    vector_s = time.perf_counter() - t0
+                   seed: int = 7, repeats: int = 2) -> dict:
+    """Engine-trio wall clock on the identical seeded trace (min of
+    ``repeats`` — this host's timing noise swings single runs)."""
+    walls, results = {}, {}
+    for engine in ("scalar", "vectorized", "batched"):
+        trials = []
+        for _ in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            results[engine] = _sim(engine, tenants, duration, seed).run()
+            trials.append(time.perf_counter() - t0)
+        walls[engine] = min(trials)
     steps = duration * tenants          # tenant-seconds simulated
+    rs, rv, rb = (results[e] for e in ("scalar", "vectorized", "batched"))
+    identical = bool(
+        rs.violation_rate == rv.violation_rate == rb.violation_rate
+        and rs.per_minute_vr == rv.per_minute_vr == rb.per_minute_vr
+        and rs.terminated == rv.terminated == rb.terminated)
     return {
         "tenants": tenants,
         "duration_s": duration,
-        "scalar_wall_s": scalar_s,
-        "vector_wall_s": vector_s,
-        "scalar_steps_per_s": steps / scalar_s,
-        "vector_steps_per_s": steps / vector_s,
-        "speedup": scalar_s / vector_s,
-        "bitwise_identical": bool(
-            rs.violation_rate == rv.violation_rate
-            and rs.per_minute_vr == rv.per_minute_vr
-            and rs.terminated == rv.terminated),
+        "scalar_wall_s": walls["scalar"],
+        "vector_wall_s": walls["vectorized"],
+        "batched_wall_s": walls["batched"],
+        "scalar_steps_per_s": steps / walls["scalar"],
+        "vector_steps_per_s": steps / walls["vectorized"],
+        "batched_steps_per_s": steps / walls["batched"],
+        "speedup": walls["scalar"] / walls["vectorized"],
+        "batched_speedup_vs_scalar": walls["scalar"] / walls["batched"],
+        "batched_speedup_vs_vectorized": (walls["vectorized"]
+                                          / walls["batched"]),
+        "bitwise_identical": identical,
     }
 
 
@@ -79,4 +92,88 @@ def federation_sweep(n_nodes: int = 4, tenants: int = 32,
             "cloud": len(res.cloud),
             "wall_s": wall,
         })
+    return rows
+
+
+# ---------------------------------------------------------------- fleet scale
+def _fleet_fed(workload: str, n_nodes: int, per_node: int, duration: int,
+               round_interval: int, policy: str, engine: str,
+               seed: int = 7) -> EdgeFederation:
+    tenants = n_nodes * per_node
+    rng = np.random.default_rng(42)
+    fleet = (make_stream_fleet(tenants, rng) if workload == "stream"
+             else make_game_fleet(tenants, rng))
+    cfg = FederationConfig(
+        n_nodes=n_nodes, duration_s=duration, round_interval=round_interval,
+        capacity_units=paper_capacity_units(tenants, n_nodes, headroom=16),
+        policy=policy, seed=seed, engine=engine)
+    return EdgeFederation(fleet, cfg)
+
+
+def _federation_results_identical(a, b) -> bool:
+    return bool(
+        a.violation_rate == b.violation_rate
+        and a.per_node_vr == b.per_node_vr
+        and a.total_requests == b.total_requests
+        and a.replaced == b.replaced and a.cloud == b.cloud
+        and all(np.array_equal(a.node_results[n].latencies,
+                               b.node_results[n].latencies)
+                and a.node_results[n].per_minute_vr
+                == b.node_results[n].per_minute_vr
+                for n in a.node_results))
+
+
+def fleet_scale_sweep(quick: bool = False, repeats: int = 2) -> list[dict]:
+    """Batched vs vectorized on 4-node federations swept to ≥1M
+    tenant-seconds (32 tenants per node — the paper's per-node fleet).
+
+    ``policy="none"`` rows isolate pure engine throughput (no Procedure-1
+    rounds); ``sdps`` rows include the controller cost both engines
+    share, which compresses the engine gap. Each row cross-checks that
+    both engines produced the bitwise-identical FederationResult; in
+    quick mode (the CI smoke) a mismatch raises instead of just being
+    recorded, so fleet-scale engine regressions fail the build.
+    """
+    if quick:
+        configs = [("stream", 2, 8, 600, 300)]
+        repeats = 1
+    else:
+        configs = [
+            # 128 tenants × 8000 s = 1.024M tenant-seconds
+            ("stream", 4, 32, 8000, 300),
+            # finer scaling cadence: 2× the chunks and rounds
+            ("stream", 4, 32, 8000, 150),
+            # game fleet: ~25 req/s per tenant keeps this shorter run
+            # (393k t-s) jitter-bound — the honest worst case
+            ("game", 4, 32, 3072, 300),
+        ]
+    rows = []
+    for workload, n_nodes, per_node, duration, ri in configs:
+        ts = n_nodes * per_node * duration
+        for policy in ("none", "sdps"):
+            row = {
+                "workload": workload, "n_nodes": n_nodes,
+                "tenants_per_node": per_node, "duration_s": duration,
+                "round_interval": ri, "policy": policy,
+                "tenant_seconds": ts,
+            }
+            results = {}
+            for engine in ("vectorized", "batched"):
+                walls = []
+                for _ in range(repeats):
+                    fed = _fleet_fed(workload, n_nodes, per_node, duration,
+                                     ri, policy, engine)
+                    t0 = time.perf_counter()
+                    results[engine] = fed.run()
+                    walls.append(time.perf_counter() - t0)
+                row[f"{engine}_wall_s"] = min(walls)
+                row[f"{engine}_ts_per_s"] = ts / min(walls)
+            row["speedup_batched_vs_vectorized"] = (
+                row["vectorized_wall_s"] / row["batched_wall_s"])
+            row["bitwise_identical"] = _federation_results_identical(
+                results["vectorized"], results["batched"])
+            if quick and not row["bitwise_identical"]:
+                raise AssertionError(
+                    f"engine divergence on {row}: batched != vectorized")
+            rows.append(row)
     return rows

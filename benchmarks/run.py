@@ -21,7 +21,10 @@ def _csv(name: str, us: float, derived: str):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="skip the engine microbenches (jit-heavy on CPU)")
+                    help="CI-sized run: skip the engine microbenches "
+                         "(jit-heavy on CPU) and shrink fedscale to a "
+                         "tiny smoke config that raises on any "
+                         "batched/vectorized divergence")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -97,8 +100,10 @@ def main() -> None:
         sp = federation_bench.engine_speedup()
         results["fed_speedup"] = sp
         _csv("fed/engine_speedup", sp["vector_wall_s"] * 1e6,
-             f"{sp['speedup']:.1f}x vs scalar loop "
-             f"({sp['vector_steps_per_s']:.0f} vs "
+             f"vectorized {sp['speedup']:.1f}x / batched "
+             f"{sp['batched_speedup_vs_scalar']:.1f}x vs scalar loop "
+             f"({sp['batched_steps_per_s']:.0f} vs "
+             f"{sp['vector_steps_per_s']:.0f} vs "
              f"{sp['scalar_steps_per_s']:.0f} sim-steps/s, "
              f"identical={sp['bitwise_identical']})")
         rows = federation_bench.federation_sweep()
@@ -109,6 +114,22 @@ def main() -> None:
                  f"VR={r['violation_rate'] * 100:.1f}% "
                  f"replaced={r['replaced']} cloud={r['cloud']} "
                  f"max-node-overhead={r['max_round_overhead_s'] * 1e3:.2f}ms")
+
+    if want("fedscale"):
+        from benchmarks import federation_bench
+        rows = federation_bench.fleet_scale_sweep(quick=args.quick)
+        results["fedscale"] = rows
+        for r in rows:
+            _csv(
+                f"fedscale/{r['workload']}/{r['n_nodes']}x"
+                f"{r['tenants_per_node']}t/ri{r['round_interval']}/"
+                f"{r['policy']}",
+                r["batched_wall_s"] * 1e6,
+                f"{r['tenant_seconds'] / 1e6:.2f}M t-s: batched "
+                f"{r['batched_ts_per_s'] / 1e6:.2f}M t-s/s vs vectorized "
+                f"{r['vectorized_ts_per_s'] / 1e6:.2f}M t-s/s "
+                f"({r['speedup_batched_vs_vectorized']:.1f}x, "
+                f"bitwise={r['bitwise_identical']})")
 
     if want("roofline"):
         from benchmarks.roofline_report import roofline_table

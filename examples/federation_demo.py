@@ -25,12 +25,18 @@ def main():
     ap.add_argument("--tenants", type=int, default=32)
     ap.add_argument("--duration", type=int, default=1200)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--engine", default="batched",
+                    choices=["scalar", "vectorized", "batched"],
+                    help="execution engine (all three are bitwise "
+                         "identical; batched steps the whole federation "
+                         "as one matrix per chunk)")
     args = ap.parse_args()
 
     per_node_cap = paper_capacity_units(args.tenants, args.nodes,
                                         headroom=16)
     print(f"federation: {args.nodes} nodes × cap {per_node_cap}u, "
-          f"{args.tenants} tenants, {args.duration}s session\n")
+          f"{args.tenants} tenants, {args.duration}s session, "
+          f"{args.engine} engine\n")
 
     rows = []
     for policy in SWEEP_POLICIES:
@@ -38,7 +44,7 @@ def main():
         cfg = FederationConfig(
             n_nodes=args.nodes, duration_s=args.duration,
             round_interval=300, capacity_units=per_node_cap,
-            policy=policy, seed=args.seed)
+            policy=policy, seed=args.seed, engine=args.engine)
         t0 = time.perf_counter()
         res = EdgeFederation(fleet, cfg).run()
         wall = time.perf_counter() - t0

@@ -2,8 +2,9 @@
 from repro.core.controller import (AdmissionResult, DyverseController,  # noqa: F401
                                    NullActuator)
 from repro.core.monitor import Monitor, RoundMetrics  # noqa: F401
-from repro.core.priority import (POLICIES, batch_scores, cdps,  # noqa: F401
-                                 priority_score, sdps, sps, wdps)
+from repro.core.priority import (POLICIES, batch_scores,  # noqa: F401
+                                 batch_scores_np, cdps, priority_score,
+                                 sdps, sps, wdps)
 from repro.core.quota import NodeCapacity, PoolError, ResourcePool  # noqa: F401
 from repro.core.types import (Decision, PricingModel, Quota,  # noqa: F401
                               ResourceUnit, RoundAction, RoundReport,

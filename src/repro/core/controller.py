@@ -17,7 +17,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Protocol
 
 from repro.core.monitor import Monitor
-from repro.core.priority import POLICIES, priority_score
+from repro.core.priority import POLICIES
 from repro.core.quota import NodeCapacity, PoolError, ResourcePool
 from repro.core.types import (Decision, Quota, ResourceUnit, RoundAction,
                               RoundReport, TenantSpec, TenantState, Weights)
@@ -97,18 +97,40 @@ class DyverseController:
         hist = self._history.setdefault(name, {"age": 0, "loyalty": 0})
         hist["age"] = max(hist["age"], age)
 
+    def prior_loyalty(self, name: str) -> int:
+        """Loyalty_s the Edge Manager remembers for a (possibly departed)
+        tenant — every admission on this node counted as one use of the
+        service (§3.2)."""
+        return self._history.get(name, {"loyalty": 0})["loyalty"]
+
+    def remember_loyalty(self, name: str, loyalty: int) -> None:
+        """Import a tenant's Loyalty_s from another Edge Manager: a
+        Procedure-3 refugee re-placed on a sibling keeps the SPS loyalty
+        factor its prior tenancy earned instead of restarting at 0."""
+        hist = self._history.setdefault(name, {"age": 0, "loyalty": 0})
+        hist["loyalty"] = max(hist["loyalty"], loyalty)
+
     # ------------------------------------------------------------ procedures
     def update_priorities(self) -> float:
-        """Procedure 1, line 1. Returns wall-clock overhead (seconds)."""
+        """Procedure 1, line 1. Returns wall-clock overhead (seconds).
+
+        Scores all tenants in one vectorised pass — ``batch_scores_np``
+        is bitwise-identical to the scalar ``priority_score``, so the
+        O(N)-loop and the batch produce the same priorities to the last
+        ULP (pinned by the priority regression tests)."""
         t0 = time.perf_counter()
         policy = self.policy if self.policy != "none" else "sps"
-        if self.normalize_factors and self.registry:
-            from repro.core.priority import batch_scores_normalized
+        if self.registry:
+            from repro.core.priority import batch_scores_np
             from repro.core.types import PricingModel
+            scorer = batch_scores_np
+            if self.normalize_factors:
+                from repro.core.priority import batch_scores_normalized
+                scorer = batch_scores_normalized
             names = list(self.registry)
             sts = [self.registry[n] for n in names]
             ms = [self.monitor.prev(n) for n in names]
-            scores = batch_scores_normalized(
+            scores = scorer(
                 policy,
                 [s.spec.premium for s in sts], [s.ordinal for s in sts],
                 [s.age for s in sts], [s.loyalty for s in sts],
@@ -117,13 +139,8 @@ class DyverseController:
                 [s.scale_count for s in sts],
                 [s.spec.pricing == PricingModel.PFP for s in sts],
                 self.weights)
-            for n, sc in zip(names, scores):
-                self.registry[n].priority = float(sc)
-        else:
-            for name, st in self.registry.items():
-                m = self.monitor.prev(name)
-                st.priority = priority_score(policy, st, m.requests, m.users,
-                                             m.data_mb, self.weights)
+            for st, sc in zip(sts, scores):
+                st.priority = float(sc)
         return time.perf_counter() - t0
 
     def run_round(self) -> RoundReport:

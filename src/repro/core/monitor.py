@@ -13,7 +13,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 
-@dataclass
+@dataclass(slots=True)
 class RoundMetrics:
     """One tenant's metrics within the current scaling round."""
 
@@ -79,6 +79,25 @@ class Monitor:
         self.total_requests += n
         self.total_violations += viol
         return viol
+
+    def record_batch_sums(self, tenant: str, n: int, lat_sum: float,
+                          violations: int, data_mb: float = 0.0,
+                          users: int | None = None) -> None:
+        """Batch recording from pre-reduced sums (fleet-batched engine
+        fast path). The caller guarantees ``lat_sum``/``violations`` are
+        the same reductions ``record_batch`` would compute — for the
+        simulator that means a contiguous-slice ``.sum()`` (identical
+        pairwise reduction) and an exact integer violation tally.
+        ``users`` folds in a trailing ``set_users`` call."""
+        m = self._cur.setdefault(tenant, RoundMetrics())
+        m.requests += n
+        m.lat_sum += lat_sum
+        m.data_mb += data_mb
+        m.violations += violations
+        if users is not None:
+            m.users = users
+        self.total_requests += n
+        self.total_violations += violations
 
     def set_users(self, tenant: str, users: int) -> None:
         self._cur.setdefault(tenant, RoundMetrics()).users = users

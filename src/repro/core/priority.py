@@ -70,6 +70,42 @@ def priority_score(policy: str, state: TenantState, requests: float,
 
 
 # ---------------------------------------------------------------- vectorised
+def batch_scores_np(policy: str, premium, ordinal, age, loyalty, requests,
+                    users, data_mb, reward, scale_count, pfp_mask,
+                    w: Weights = Weights()) -> np.ndarray:
+    """NumPy scorer BITWISE-identical to ``priority_score`` per element.
+
+    Every term is evaluated in the same order, with the same float64
+    ops, as the scalar Eqs. 2–6 above — only the per-tenant Python loop
+    is replaced by elementwise array arithmetic. This is what
+    ``DyverseController.update_priorities`` runs each round, so it must
+    never drift from the scalar reference (pinned by the priority
+    regression tests)."""
+    premium = np.asarray(premium, np.float64)
+    ordinal = np.asarray(ordinal, np.int64)
+    age = np.asarray(age, np.int64)
+    loyalty = np.asarray(loyalty, np.int64)
+    base = (w.W_P * premium + w.W_ID / np.maximum(ordinal, 1)
+            + w.W_Age * age + w.W_Loyalty * loyalty)
+    if policy == "sps":
+        return base
+    req = np.asarray(requests, np.float64)
+    usr = np.asarray(users, np.float64)
+    dat = np.asarray(data_mb, np.float64)
+    add = base + w.W_Request * req + w.W_U * usr + w.W_Data * dat
+    rec = (base + 1.0 / (w.W_Request * np.maximum(req, 1.0))
+           + 1.0 / (w.W_U * np.maximum(usr, 1.0))
+           + 1.0 / (w.W_Data * np.maximum(dat, 1.0)))
+    score = np.where(np.asarray(pfp_mask, bool), rec, add)
+    if policy == "wdps":
+        return score
+    score = score + w.W_Reward * np.asarray(reward, np.int64)
+    if policy == "cdps":
+        return score
+    scl = np.asarray(scale_count, np.float64)
+    return score + 1.0 / (w.W_Scale * np.maximum(scl, 1.0))
+
+
 def batch_scores(policy: str, premium, ordinal, age, loyalty, requests, users,
                  data_mb, reward, scale_count, pfp_mask,
                  w: Weights = Weights()):

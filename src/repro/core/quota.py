@@ -27,14 +27,19 @@ class ResourcePool:
         self.capacity = capacity
         self.uR = uR
         self._alloc: dict[str, Quota] = {}
+        # running Σ_s R_s so FR probes are O(1) — Procedure 2 probes FR
+        # inside its eviction loop, which made rounds O(N²) when ``free``
+        # re-summed the registry every call. check_invariants() still
+        # recounts from scratch and cross-checks these totals.
+        self._used_slots = 0
+        self._used_pages = 0
 
     # ---- views
     @property
     def free(self) -> Quota:
         """FR."""
-        used_s = sum(q.slots for q in self._alloc.values())
-        used_p = sum(q.pages for q in self._alloc.values())
-        return Quota(self.capacity.slots - used_s, self.capacity.pages - used_p)
+        return Quota(self.capacity.slots - self._used_slots,
+                     self.capacity.pages - self._used_pages)
 
     @property
     def free_units(self) -> int:
@@ -51,7 +56,13 @@ class ResourcePool:
 
     @property
     def used_units(self) -> int:
-        """Σ_s R_s in uR units (allocation pressure, for placement)."""
+        """Σ_s R_s in uR units (allocation pressure, for placement).
+
+        Deliberately NOT derived from the running slot/page totals:
+        per-tenant units take a min across dimensions, and a sum of
+        mins only equals the min of sums while every quota is a whole
+        uR multiple — an invariant worth not betting placement on.
+        O(N), but only placement probes pay it."""
         return sum(q.units(self.uR) for q in self._alloc.values())
 
     def can_admit(self, units: int) -> bool:
@@ -69,6 +80,8 @@ class ResourcePool:
         if q.slots > f.slots or q.pages > f.pages:
             raise PoolError(f"admit {tenant}: need {q}, free {f}")
         self._alloc[tenant] = q
+        self._used_slots += q.slots
+        self._used_pages += q.pages
         return q.copy()
 
     def grow(self, tenant: str, units: int) -> Quota:
@@ -78,17 +91,31 @@ class ResourcePool:
         if add.slots > f.slots or add.pages > f.pages:
             raise PoolError(f"grow {tenant} by {units}u: need {add}, free {f}")
         self._alloc[tenant] = Quota(q.slots + add.slots, q.pages + add.pages)
+        self._used_slots += add.slots
+        self._used_pages += add.pages
         return self._alloc[tenant].copy()
 
     def shrink(self, tenant: str, units: int) -> Quota:
         q = self._alloc[tenant]
-        self._alloc[tenant] = q.sub_units(units, self.uR)
-        return self._alloc[tenant].copy()
+        new = q.sub_units(units, self.uR)
+        self._alloc[tenant] = new
+        self._used_slots -= q.slots - new.slots
+        self._used_pages -= q.pages - new.pages
+        return new.copy()
 
     def release(self, tenant: str) -> Quota:
-        return self._alloc.pop(tenant)
+        q = self._alloc.pop(tenant)
+        self._used_slots -= q.slots
+        self._used_pages -= q.pages
+        return q
 
     def check_invariants(self) -> None:
+        used_s = sum(q.slots for q in self._alloc.values())
+        used_p = sum(q.pages for q in self._alloc.values())
+        if (used_s, used_p) != (self._used_slots, self._used_pages):
+            raise PoolError(
+                f"running totals drifted: {self._used_slots}/"
+                f"{self._used_pages} vs recount {used_s}/{used_p}")
         f = self.free
         if f.slots < 0 or f.pages < 0:
             raise PoolError(f"overcommitted: free {f}")

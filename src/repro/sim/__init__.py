@@ -1,7 +1,9 @@
-from repro.sim.workload import (GameWorkload, StreamWorkload,  # noqa: F401
-                                Workload, make_game_fleet, make_stream_fleet)
-from repro.sim.edgesim import (EdgeNodeSim, SimConfig,  # noqa: F401
-                               SimResult, tenant_stream)
+from repro.sim.workload import (FleetBatch, GameWorkload,  # noqa: F401
+                                StreamWorkload, Workload, make_game_fleet,
+                                make_stream_fleet)
+from repro.sim.edgesim import (ENGINES, EdgeNodeSim,  # noqa: F401
+                               FleetStepper, SimConfig, SimResult,
+                               tenant_stream)
 from repro.sim.federation import (SWEEP_POLICIES, EdgeFederation,  # noqa: F401
                                   FederationConfig, FederationResult,
                                   PlacementEvent, paper_capacity_units)

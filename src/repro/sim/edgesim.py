@@ -7,18 +7,24 @@ terminated tenants are serviced "from the Cloud" with WAN latency added —
 requests keep flowing, as in the paper (users are redirected, not
 dropped).
 
-Two execution engines share one trace:
+Three execution engines share one trace:
 
 * ``scalar`` — the reference per-second, per-tenant Python loop;
-* ``vectorized`` (default) — batched NumPy over whole chunks: arrival
-  counts, latencies, and SLO accounting are computed per round-interval
-  chunk, with controller rounds replayed at the same boundaries.
+* ``vectorized`` (default) — batched NumPy over whole chunks, one pass
+  of array calls per tenant per round-interval chunk;
+* ``batched`` — fleet-batched: a whole node's chunk is computed as one
+  (tenants × seconds) matrix via :class:`~repro.sim.workload.FleetBatch`
+  (and a federation's chunk as one stacked (nodes·tenants × seconds)
+  step, see :class:`FleetStepper`), collapsing the per-tenant Python
+  loops to a handful of NumPy calls per chunk.
 
-Both engines draw the identical random trace per chunk (per-tenant
-arrival counts + jitter, from per-tenant RNG substreams) and evaluate
-the identical floating-point expressions, so their violation rates,
-per-minute timelines, and termination lists are bitwise identical —
-only wall-clock differs.
+All engines draw the identical random trace per chunk (per-tenant
+arrival counts + jitter, from per-tenant RNG substreams — the batched
+engine never merges draws across tenants, it only batches the
+deterministic math between them) and evaluate the identical
+floating-point expressions element for element, so their violation
+rates, per-minute timelines, and termination lists are bitwise
+identical — only wall-clock differs.
 
 Reproduces: Fig. 3 (violation-rate timeline), Figs. 4/5 (violation rate
 vs #tenants × SLO), Figs. 6/7 (latency distributions), and the overhead
@@ -33,13 +39,13 @@ import numpy as np
 
 from repro.core import (DyverseController, NodeCapacity, PricingModel,
                         Quota, ResourceUnit, TenantSpec)
-from repro.sim.workload import Workload
+from repro.sim.workload import FleetBatch, Workload
 
 WAN_EXTRA_LATENCY = 0.12     # s: Cloud round-trip penalty after eviction
 WAN_BW_MBPS = 20.0           # migration bandwidth Edge→Cloud
 CLOUD_UNITS = 10 ** 6        # effectively unconstrained Cloud capacity
 
-ENGINES = ("scalar", "vectorized")
+ENGINES = ("scalar", "vectorized", "batched")
 
 
 def tenant_stream(seed: int, name: str):
@@ -68,8 +74,9 @@ class SimConfig:
     donation_fraction: float = 0.3    # tenants willing to donate
     pricing: PricingModel = PricingModel.HYBRID
     normalize_factors: bool = False  # beyond-paper mode (see core.priority)
-    engine: str = "vectorized"        # "scalar" reference | "vectorized"
-    seed: int = 0
+    engine: str = "vectorized"        # "scalar" | "vectorized" | "batched"
+    jit_scale: bool = False           # batched engine: jax-jit the latency
+    seed: int = 0                     # scale (fast, NOT bitwise-guaranteed)
 
 
 @dataclass
@@ -77,8 +84,10 @@ class SimResult:
     policy: str
     violation_rate: float                       # Eq. 1 over whole run
     per_minute_vr: list[float] = field(default_factory=list)
-    latencies: np.ndarray = None                # all request latencies
-    slos: np.ndarray = None                     # matching SLO per request
+    # all request latencies + the matching SLO per request; empty until
+    # finalize() fills them (so band_fractions is safe to call any time)
+    latencies: np.ndarray = field(default_factory=lambda: np.empty(0))
+    slos: np.ndarray = field(default_factory=lambda: np.empty(0))
     overhead_priority_s: list[float] = field(default_factory=list)
     overhead_scaling_s: list[float] = field(default_factory=list)
     terminated: list[str] = field(default_factory=list)
@@ -136,6 +145,10 @@ class EdgeNodeSim:
         # name → (arrivals Generator, jitter Generator)
         self.tenant_rngs: dict[str, tuple] = {}
         self.units: dict[str, int] = {}
+        # bumped on every fleet-membership change so FleetStepper knows
+        # when its stacked parameter/RNG caches are stale
+        self._fleet_epoch = 0
+        self._stepper: FleetStepper | None = None
         self.evicted: set[str] = set()
         self.migration_s: list[float] = []
         self.ctrl = DyverseController(
@@ -183,6 +196,7 @@ class EdgeNodeSim:
         self.tenant_rngs[wl.name] = (
             tenant_rng if tenant_rng is not None
             else tenant_stream(self.cfg.seed, wl.name))
+        self._fleet_epoch += 1
         res = self.ctrl.admit(spec)
         if not res.admitted:
             self.evicted.add(wl.name)
@@ -200,6 +214,7 @@ class EdgeNodeSim:
         self.tenant_rngs[wl.name] = (
             tenant_rng if tenant_rng is not None
             else tenant_stream(self.cfg.seed, wl.name))
+        self._fleet_epoch += 1
         self.evicted.add(wl.name)
 
     def remove_tenant(self, name: str) -> Workload:
@@ -208,6 +223,7 @@ class EdgeNodeSim:
         self.evicted.discard(name)
         self.units.pop(name, None)
         self.tenant_rngs.pop(name)
+        self._fleet_epoch += 1
         return self.workloads.pop(name)
 
     @property
@@ -221,14 +237,20 @@ class EdgeNodeSim:
         The scalar engine runs the per-second, per-tenant Python inner
         loop (per-second RNG draws, latency evaluation and SLO counting,
         as in the original second-stepped simulator); the vectorized
-        engine realises the same trace with O(1) NumPy calls per tenant.
-        Because each tenant's arrival and jitter draws live on their own
-        Generators, the two call patterns consume the bitstreams
-        identically, and because both engines feed the Monitor identical
-        per-chunk arrays, every downstream quantity — violation rates,
-        per-minute timelines, controller decisions — is bitwise equal."""
+        engine realises the same trace with O(1) NumPy calls per tenant;
+        the batched engine with O(1) NumPy calls per *fleet* (one
+        (tenants × seconds) matrix). Because each tenant's arrival and
+        jitter draws live on their own Generators, the three call
+        patterns consume the bitstreams identically, and because all
+        engines feed the Monitor identical per-chunk values, every
+        downstream quantity — violation rates, per-minute timelines,
+        controller decisions — is bitwise equal."""
         if self.cfg.engine == "scalar":
             self._step_chunk_scalar(t0, t1)
+        elif self.cfg.engine == "batched":
+            if self._stepper is None:
+                self._stepper = FleetStepper([self])
+            self._stepper.step(t0, t1)
         else:
             self._step_chunk_vectorized(t0, t1)
 
@@ -317,10 +339,15 @@ class EdgeNodeSim:
         res.violation_rate = self.ctrl.node_violation_rate
         res.total_requests = self.ctrl.monitor.total_requests
         res.total_violations = self.ctrl.monitor.total_violations
-        for m in range(self.cfg.duration_s // 60):
-            req = int(self._req_s[m * 60:(m + 1) * 60].sum())
-            viol = int(self._viol_s[m * 60:(m + 1) * 60].sum())
-            res.per_minute_vr.append(viol / max(req, 1))
+        if self.cfg.duration_s > 0:
+            # minute windows, INCLUDING the trailing partial minute when
+            # duration_s % 60 != 0 (reduceat's last segment runs to the
+            # end of the per-second arrays)
+            edges = np.arange(0, self.cfg.duration_s, 60)
+            req_m = np.add.reduceat(self._req_s, edges)
+            viol_m = np.add.reduceat(self._viol_s, edges)
+            res.per_minute_vr.extend(
+                int(v) / max(int(r), 1) for r, v in zip(req_m, viol_m))
         res.latencies = (np.concatenate(self._all_lat)
                          if self._all_lat else np.empty(0))
         res.slos = (np.concatenate(self._all_slo)
@@ -340,3 +367,167 @@ class EdgeNodeSim:
                 self.run_controller_round()
             t = t1
         return self.finalize()
+
+
+_RNG_WORKER = None
+
+
+def _rng_worker():
+    """Process-wide single-thread executor for overlapped RNG fills —
+    shared across steppers so short-lived simulators don't each pin an
+    idle thread. Steppers run one chunk at a time, so queued fills
+    never interleave within a Generator."""
+    global _RNG_WORKER
+    if _RNG_WORKER is None:
+        from concurrent.futures import ThreadPoolExecutor
+
+        _RNG_WORKER = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-sim-rng")
+    return _RNG_WORKER
+
+
+class FleetStepper:
+    """``engine="batched"``: advances one or many nodes in lockstep,
+    computing each chunk as a single stacked (nodes·tenants × seconds)
+    matrix instead of per-tenant array passes.
+
+    Bitwise-equivalence contract (vs the scalar/vectorized engines):
+
+    * all deterministic math (arrival rates, demand, latency scale, the
+      per-request scale×jitter product, WAN penalty, SLO comparisons)
+      evaluates the identical float64 elementwise ops in the identical
+      order — :class:`~repro.sim.workload.FleetBatch` only restructures
+      loops, never arithmetic;
+    * random draws remain on each tenant's private Generator pair, in
+      fleet order, so every substream is consumed exactly as the
+      per-tenant engines consume it;
+    * Monitor feeds use per-tenant contiguous slices of the flat request
+      axis, whose ``.sum()`` is the same pairwise reduction
+      ``record_batch`` performs on the per-tenant arrays;
+    * per-second violation/request tallies are integer arithmetic.
+
+    Stacked parameter arrays and RNG lists are cached and rebuilt when
+    any node's fleet membership changes (``_fleet_epoch``), which is how
+    federation re-placement stays cheap between round boundaries.
+
+    Jitter draws run on a single worker thread, overlapped with the
+    deterministic matrix math on the main thread: NumPy's Generator
+    releases the GIL while filling, each Generator is touched by exactly
+    one thread, and the per-tenant call sequence is unchanged — so the
+    overlap changes wall-clock only, never the bitstream.
+    """
+
+    def __init__(self, nodes: list[EdgeNodeSim]):
+        self.nodes = nodes
+        self._epochs: tuple | None = None
+        self._use_jax = any(n.cfg.jit_scale for n in nodes)
+
+    def _rebuild(self) -> None:
+        entries = []
+        slices = []
+        start = 0
+        for node in self.nodes:
+            for name, wl in node.workloads.items():
+                entries.append((node, name, wl))
+            slices.append(slice(start, len(entries)))
+            start = len(entries)
+        self._entries = entries
+        self._node_slices = slices
+        self._batch = FleetBatch([wl for _, _, wl in entries])
+        self._arr_rngs = [node.tenant_rngs[name][0]
+                          for node, name, _ in entries]
+        self._jit_rngs = [node.tenant_rngs[name][1]
+                          for node, name, _ in entries]
+        # membership-stable per-tenant metadata, gathered once per epoch
+        # (same python products the other engines compute per chunk)
+        self._slos = np.array([node.cfg.slo_scale * wl.base_latency
+                               for node, _, wl in entries], np.float64)
+        self._data_mb = [wl.data_per_request_mb for _, _, wl in entries]
+        self._monitors = [node.ctrl.monitor for node, _, _ in entries]
+
+    def _draw_jitter(self, totals_l: list) -> list:
+        return [wl.draw_jitter(self._jit_rngs[i], totals_l[i])
+                for i, (_, _, wl) in enumerate(self._entries)]
+
+    def step(self, t0: int, t1: int) -> None:
+        epochs = tuple(n._fleet_epoch for n in self.nodes)
+        if epochs != self._epochs:
+            self._rebuild()
+            self._epochs = epochs
+        entries = self._entries
+        T, S = len(entries), t1 - t0
+        if T == 0:
+            return
+        counts = self._batch.arrival_counts(self._arr_rngs, t0, t1)
+        totals = counts.sum(axis=1)
+        totals_l = totals.tolist()
+        # jitter draws overlap the deterministic math below (see class
+        # docstring); the worker owns every jitter Generator until the
+        # future resolves
+        jitter_fut = _rng_worker().submit(self._draw_jitter, totals_l)
+        units = np.array([node._tenant_units(name)
+                          for node, name, _ in entries], np.int64)
+        evicted = np.array([name in node.evicted
+                            for node, name, _ in entries], bool)
+        scale = self._batch.latency_scale(units, t0, t1,
+                                          use_jax=self._use_jax)
+        # per-request deterministic factor: repeat each (tenant, second)
+        # cell by its arrival count — a time-invariant fleet carries one
+        # column per tenant, every second of which holds the same value
+        if scale.shape[1] == 1:
+            per_req = np.repeat(scale[:, 0], totals)
+        else:
+            per_req = np.repeat(scale.ravel(), counts.ravel())
+        slo_rep = np.repeat(self._slos, totals)
+        ends = np.cumsum(counts.ravel())
+        # per-tenant extents on the flat request axis
+        starts = np.zeros(T + 1, np.int64)
+        np.cumsum(totals, out=starts[1:])
+        jit_parts = jitter_fut.result()
+        lat = per_req * (np.concatenate(jit_parts) if jit_parts
+                         else np.empty(0))
+        # per-(tenant, second) violation tallies, exactly: only the
+        # violating requests need attribution, so locate each one's cell
+        # on the flat request axis and count them (integer arithmetic —
+        # identical to reducing the comparison per cell)
+        vpos = np.flatnonzero(lat > slo_rep)
+        if vpos.size:
+            viol_ts = np.bincount(
+                np.searchsorted(ends, vpos, side="right"),
+                minlength=ends.size).reshape(T, S)
+        else:
+            viol_ts = np.zeros((T, S), np.int64)
+        viol_t = viol_ts.sum(axis=1)
+        # Cloud-serviced tenants: WAN penalty on the user-visible
+        # latencies (same elementwise add the other engines apply)
+        for i in np.flatnonzero(evicted):
+            lat[starts[i]:starts[i + 1]] += WAN_EXTRA_LATENCY
+        # per-node per-second tallies over Edge-hosted rows only
+        # (integer sums — order-independent, exact)
+        live = ~evicted
+        if live.all():
+            counts_live, viol_live = counts, viol_ts
+        else:
+            counts_live = counts * live[:, None]
+            viol_live = viol_ts * live[:, None]
+        for node, sl in zip(self.nodes, self._node_slices):
+            if sl.stop > sl.start:
+                node._req_s[t0:t1] += counts_live[sl].sum(axis=0)
+                node._viol_s[t0:t1] += viol_live[sl].sum(axis=0)
+            seg = slice(starts[sl.start], starts[sl.stop])
+            if seg.stop > seg.start:
+                node._all_lat.append(lat[seg])
+                node._all_slo.append(slo_rep[seg])
+        starts_l = starts.tolist()
+        viol_l = viol_t.tolist()
+        evicted_l = evicted.tolist()
+        monitors = self._monitors
+        for i, (node, name, wl) in enumerate(entries):
+            if evicted_l[i]:
+                continue
+            # users() is re-read every chunk, like the other engines do —
+            # a subclass may report a time-varying user count
+            monitors[i].record_batch_sums(
+                name, totals_l[i],
+                float(lat[starts_l[i]:starts_l[i + 1]].sum()), viol_l[i],
+                totals_l[i] * self._data_mb[i], users=wl.users())

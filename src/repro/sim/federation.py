@@ -36,7 +36,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import POLICIES, PricingModel, TenantSpec
-from repro.sim.edgesim import EdgeNodeSim, SimConfig, SimResult, tenant_stream
+from repro.sim.edgesim import (EdgeNodeSim, FleetStepper, SimConfig,
+                               SimResult, tenant_stream)
 from repro.sim.workload import Workload
 
 # the no-scaling baseline + the four priority policies (Figs. 3–5 sweeps)
@@ -143,8 +144,8 @@ class EdgeFederation:
 
     def _place(self, wl: Workload, *, donation: bool, premium: float,
                t: int, spec: TenantSpec | None = None, tenant_rng=None,
-               source: str | None = None,
-               prior_age: int = 0) -> EdgeNodeSim | None:
+               source: str | None = None, prior_age: int = 0,
+               prior_loyalty: int = 0) -> EdgeNodeSim | None:
         kind = "admit" if source is None else "replace"
         # a tenant Procedure 3 just evicted must go to a SIBLING node —
         # the source freed its units, so it would otherwise re-admit the
@@ -157,6 +158,11 @@ class EdgeFederation:
                 # seed BEFORE admit: ctrl.admit builds the TenantState
                 # from its history, so the refugee keeps its Age_s credit
                 node.ctrl.remember_age(wl.name, prior_age)
+            if prior_loyalty:
+                # §3.2: Loyalty_s counts times the service was used —
+                # tenancy on a sibling node is still the same federated
+                # service, so migration must not zero it
+                node.ctrl.remember_loyalty(wl.name, prior_loyalty)
             if not node.add_tenant(wl, donation=donation, premium=premium,
                                    spec=spec, tenant_rng=tenant_rng):
                 # can_admit() and admit() test the same capacity condition
@@ -180,7 +186,8 @@ class EdgeFederation:
     def _replace_terminated(self, node: EdgeNodeSim, terminated: list[str],
                             t: int) -> None:
         for name in terminated:
-            age = node.ctrl.prior_age(name)   # Age_s carries over
+            age = node.ctrl.prior_age(name)        # Age_s carries over
+            loyalty = node.ctrl.prior_loyalty(name)  # so does Loyalty_s
             wl = node.workloads[name]
             rng = node.tenant_rngs[name]
             node.remove_tenant(name)
@@ -193,16 +200,25 @@ class EdgeFederation:
                 premium=0.0,        # premium was spent on the first node
             )
             self._place(wl, donation=False, premium=0.0, t=t, spec=spec,
-                        tenant_rng=rng, source=node.name, prior_age=age)
+                        tenant_rng=rng, source=node.name, prior_age=age,
+                        prior_loyalty=loyalty)
 
     # ---------------------------------------------------------- execution
     def run(self) -> FederationResult:
         cfg = self.cfg
+        # batched engine: all nodes advance as ONE stacked
+        # (nodes·tenants × seconds) step per chunk; the stepper's caches
+        # follow re-placement via the nodes' fleet epochs
+        stepper = (FleetStepper(self.nodes)
+                   if cfg.engine == "batched" else None)
         t = 0
         while t < cfg.duration_s:
             t1 = min(t + cfg.round_interval, cfg.duration_s)
-            for node in self.nodes:
-                node.step_chunk(t, t1)
+            if stepper is not None:
+                stepper.step(t, t1)
+            else:
+                for node in self.nodes:
+                    node.step_chunk(t, t1)
             if cfg.policy != "none" and t1 % cfg.round_interval == 0 \
                     and t1 < cfg.duration_s:
                 # all Procedure-1 rounds first, re-placement after: a

@@ -28,6 +28,24 @@ of scalar draws (elementwise generation, no cached state), so as long
 as each kind of draw has its own Generator the two call patterns yield
 bitwise-identical traces — which is what makes the two engines agree
 exactly.
+
+Fleet-batched API: :class:`FleetBatch` stacks a whole fleet on a tenant
+axis and evaluates arrival rates, demand rates, and latency scales as
+(tenants × seconds) matrices — a handful of NumPy calls per chunk
+instead of ~20 per tenant. The batched engine stays bitwise identical
+to the per-tenant engines because
+
+* deterministic expressions (``_lam``, ``demand_rates``,
+  ``latency_scale``) broadcast per-tenant parameter *columns* against
+  the shared seconds *row*, evaluating the exact same elementwise
+  float64 ops in the exact same order as the per-tenant calls — only
+  the loop structure changes, never the arithmetic; and
+* random draws stay on each tenant's private Generator pair: batched
+  Poisson arrivals are drawn per tenant from the batched rate matrix's
+  rows (same λ values → same bitstream consumption), and jitter is
+  drawn per tenant then concatenated. No draw is ever merged across
+  tenants, so every substream advances exactly as it does under the
+  scalar and vectorized engines.
 """
 from __future__ import annotations
 
@@ -91,6 +109,32 @@ class Workload:
         return scale * self.draw_jitter(rng, n)
 
 
+    # ---- fleet-batched forms (batched engine) ---------------------------
+    # Subclasses override these with true tenant-axis vectorizations; the
+    # base fallbacks stack the per-instance results so any custom Workload
+    # stays correct (if not fast) under engine="batched".
+    @classmethod
+    def batch_demand_rates(cls, fleet: list["Workload"], t0: int,
+                           t1: int) -> np.ndarray:
+        """Expected work/s as a (len(fleet), t1-t0) matrix. A class whose
+        demand is constant across seconds may return a (len(fleet), 1)
+        column instead — broadcasting it over the window is bitwise
+        identical to evaluating every second, and lets the batched
+        engine collapse the latency-scale math to one column."""
+        return np.stack([w.demand_rates(t0, t1) for w in fleet])
+
+    @classmethod
+    def batch_arrival_counts(cls, fleet: list["Workload"], rngs: list,
+                             t0: int, t1: int) -> np.ndarray:
+        """Per-second request counts, (len(fleet), t1-t0) int64. Random
+        draws MUST come from each tenant's own ``rngs`` entry, in fleet
+        order, consuming the bitstream exactly as the per-tenant
+        ``arrival_counts`` call would — that is the whole bitwise-
+        equivalence contract."""
+        return np.stack([w.arrival_counts(r, t0, t1)
+                         for w, r in zip(fleet, rngs)])
+
+
 @dataclass
 class GameWorkload(Workload):
     """iPokeMon-like: n_users each ~poisson(rate_per_user) req/s with a
@@ -124,6 +168,42 @@ class GameWorkload(Workload):
     def users(self) -> int:
         return self.n_users
 
+    # ---- fleet-batched forms --------------------------------------------
+    @classmethod
+    def _batch_lam(cls, fleet: list["GameWorkload"], t0: int,
+                   t1: int) -> np.ndarray:
+        """(len(fleet), t1-t0) arrival-rate matrix, rows bitwise equal to
+        each instance's ``_lam``: per-tenant parameters broadcast as
+        columns against the shared seconds row, so every element goes
+        through the identical float64 op sequence as the scalar form."""
+        tp = 2 * np.pi * np.arange(t0, t1, dtype=np.float64)
+        period = np.array([w.burst_period for w in fleet],
+                          np.float64)[:, None]
+        users = np.array([w.n_users for w in fleet], np.int64)[:, None]
+        amp = np.array([w.burst_amp for w in fleet], np.float64)[:, None]
+        phase = np.maximum(1.0 + amp * np.sin(tp / period + users), 0.05)
+        rate = np.array([w.n_users * w.rate_per_user for w in fleet],
+                        np.float64)[:, None]
+        return rate * phase
+
+    @classmethod
+    def batch_demand_rates(cls, fleet: list["GameWorkload"], t0: int,
+                           t1: int) -> np.ndarray:
+        wpr = np.array([w.work_per_request for w in fleet],
+                       np.float64)[:, None]
+        return cls._batch_lam(fleet, t0, t1) * wpr
+
+    @classmethod
+    def batch_arrival_counts(cls, fleet: list["GameWorkload"], rngs: list,
+                             t0: int, t1: int) -> np.ndarray:
+        lam = cls._batch_lam(fleet, t0, t1)
+        out = np.empty(lam.shape, np.int64)
+        # Poisson draws stay per-tenant (each tenant owns its substream);
+        # identical λ rows → identical bitstream consumption and counts.
+        for i, rng in enumerate(rngs):
+            out[i] = rng.poisson(lam[i])
+        return out
+
 
 @dataclass
 class StreamWorkload(Workload):
@@ -148,6 +228,133 @@ class StreamWorkload(Workload):
 
     def users(self) -> int:
         return 1
+
+    # ---- fleet-batched forms --------------------------------------------
+    @classmethod
+    def batch_demand_rates(cls, fleet: list["StreamWorkload"], t0: int,
+                           t1: int) -> np.ndarray:
+        # demand is time-invariant: return one column per tenant (each
+        # value is the same fps·work product the scalar form fills the
+        # window with) and let the batched engine broadcast it.
+        return np.array([w.fps * w.work_per_request for w in fleet],
+                        np.float64)[:, None]
+
+    @classmethod
+    def batch_arrival_counts(cls, fleet: list["StreamWorkload"], rngs: list,
+                             t0: int, t1: int) -> np.ndarray:
+        # deterministic frame schedule — consumes no randomness, exactly
+        # like the per-instance form (``rngs`` stay untouched); the floor
+        # values are exact small integers, so casting before the diff
+        # yields the same counts as diffing in float
+        fps = np.array([w.fps for w in fleet], np.float64)[:, None]
+        frames = np.floor(
+            fps * np.arange(t0, t1 + 1, dtype=np.float64)).astype(np.int64)
+        return frames[:, 1:] - frames[:, :-1]
+
+
+class FleetBatch:
+    """Stacked (tenants × seconds) evaluation of a heterogeneous fleet.
+
+    Rows follow fleet order. Tenants are grouped by concrete Workload
+    class; each class vectorizes its own expressions over the tenant
+    axis (``batch_demand_rates``/``batch_arrival_counts``) and the
+    results are scattered back into fleet-ordered matrices. Classes
+    whose demand is time-invariant contribute (G, 1) columns; when the
+    whole fleet is time-invariant the latency-scale math runs on one
+    column per tenant instead of the full window — bitwise identical,
+    since every second of a constant row is the same float64 value.
+
+    The per-tenant RNG substream contract (see module docstring) is
+    honoured by delegating all random draws to the class batchers with
+    each tenant's own Generator.
+    """
+
+    def __init__(self, fleet: list[Workload]):
+        self.fleet = list(fleet)
+        self.base_pf = np.array(
+            [w.base_latency * w.provisioned_factor for w in self.fleet],
+            np.float64)
+        self.unit_rate = np.array([w.unit_rate for w in self.fleet],
+                                  np.float64)
+        self.alpha = np.array([w.alpha for w in self.fleet], np.float64)
+        groups: dict[type, list[int]] = {}
+        for i, w in enumerate(self.fleet):
+            groups.setdefault(type(w), []).append(i)
+        self.groups = [(cls, np.asarray(idx, np.intp),
+                        [self.fleet[i] for i in idx])
+                       for cls, idx in groups.items()]
+
+    def __len__(self) -> int:
+        return len(self.fleet)
+
+    def arrival_counts(self, rngs: list, t0: int, t1: int) -> np.ndarray:
+        """(T, t1-t0) int64 per-second request counts, rows bitwise equal
+        to each tenant's own ``arrival_counts`` draw."""
+        out = np.empty((len(self.fleet), t1 - t0), np.int64)
+        for cls, idx, sub in self.groups:
+            out[idx] = cls.batch_arrival_counts(
+                sub, [rngs[i] for i in idx], t0, t1)
+        return out
+
+    def demand_rates(self, t0: int, t1: int) -> np.ndarray:
+        """(T, t1-t0) float64 — or (T, 1) when every class in the fleet
+        reports time-invariant demand."""
+        mats = [(idx, cls.batch_demand_rates(sub, t0, t1))
+                for cls, idx, sub in self.groups]
+        width = t1 - t0 if any(m.shape[1] != 1 for _, m in mats) else 1
+        out = np.empty((len(self.fleet), width), np.float64)
+        for idx, m in mats:
+            out[idx] = m          # (G,1) broadcasts over a wide window
+        return out
+
+    def latency_scale(self, units: np.ndarray, t0: int, t1: int,
+                      use_jax: bool = False) -> np.ndarray:
+        """Deterministic latency factor matrix, same column width as
+        ``demand_rates``. Each element evaluates base·pf·max(1,ρ)^α with
+        the identical float64 op sequence as ``Workload.latency_scale``
+        (the ^α is only computed where ρ>1; elsewhere the factor is
+        exactly 1.0, which is what pow would return). ``use_jax`` routes
+        the expression through a jitted kernel — fast on accelerators
+        but NOT covered by the bitwise guarantee."""
+        demand = self.demand_rates(t0, t1)
+        capacity = np.maximum(units, 1) * self.unit_rate
+        if use_jax:
+            return _jax_latency_scale(self.base_pf, self.alpha, demand,
+                                      capacity)
+        rho = demand / capacity[:, None]
+        m = np.maximum(1.0, rho)
+        powed = np.ones_like(m)
+        np.power(m, np.broadcast_to(self.alpha[:, None], m.shape),
+                 out=powed, where=m > 1.0)
+        return self.base_pf[:, None] * powed
+
+
+_jax_scale_fn = None
+
+
+def _jax_latency_scale(base_pf, alpha, demand, capacity) -> np.ndarray:
+    """jax-jitted latency-scale expression (``SimConfig.jit_scale``).
+
+    Runs under a scoped ``enable_x64`` so CPU results track NumPy
+    closely without leaking the x64 flag into the rest of the process,
+    but XLA's pow/max fusion is not guaranteed bitwise-equal to the
+    NumPy path — keep the flag off when exact cross-engine equality
+    matters (it is off by default and never used by the equivalence
+    suite)."""
+    global _jax_scale_fn
+    import jax
+
+    if _jax_scale_fn is None:
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(base_pf, alpha, demand, capacity):
+            rho = demand / capacity[:, None]
+            return base_pf[:, None] * jnp.maximum(1.0, rho) ** alpha[:, None]
+
+        _jax_scale_fn = f
+    with jax.experimental.enable_x64():
+        return np.asarray(_jax_scale_fn(base_pf, alpha, demand, capacity))
 
 
 def make_game_fleet(n: int, rng: np.random.Generator,

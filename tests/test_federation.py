@@ -79,6 +79,28 @@ def test_evicted_tenant_replaced_on_sibling_with_capacity():
     assert victim in fed.replaced
 
 
+def test_refugee_keeps_loyalty_and_age_across_migration():
+    """Regression: re-placement carried Age_s but silently reset
+    Loyalty_s to 0 — §3.2's SPS loyalty factor must survive migration,
+    so a refugee's priority reflects its prior tenancy."""
+    from repro.core.priority import sps
+
+    fed = small_fed(n_nodes=2, capacity=64, tenants=3)
+    a, b = fed.nodes
+    victim = next(iter(a.ctrl.registry))
+    loyalty_before = a.ctrl.prior_loyalty(victim)
+    assert loyalty_before >= 1          # admission counted one use (§3.2)
+    _terminate_on(fed, a, victim)
+    st = b.ctrl.registry[victim]
+    # admit on the new node counts another use on top of the carried credit
+    assert st.loyalty == loyalty_before
+    assert st.age >= 1
+    # the SPS score must include the loyalty term: compare against a
+    # hypothetical amnesiac refugee (same state, loyalty zeroed)
+    amnesiac = dataclasses.replace(st, loyalty=0)
+    assert sps(st) == pytest.approx(sps(amnesiac) + st.loyalty)
+
+
 def test_evicted_tenant_falls_back_to_cloud_when_no_sibling_fits():
     # both nodes exactly full: the sibling cannot admit the refugee
     fed = small_fed(n_nodes=2, capacity=32, tenants=4)

@@ -1,0 +1,94 @@
+"""FleetBatch: stacked (tenants × seconds) workload evaluation.
+
+The fleet-batched engine's bitwise guarantee rests on three properties
+pinned here: matrix rows equal the per-tenant API results bitwise,
+random draws consume each tenant's substream exactly as the per-tenant
+calls do, and unknown Workload subclasses fall back to a correct (if
+slower) stacked path.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import FleetBatch
+from repro.sim.edgesim import tenant_stream
+from repro.sim.workload import (StreamWorkload, Workload, make_game_fleet,
+                                make_stream_fleet)
+
+
+def mixed_fleet():
+    rng = np.random.default_rng(42)
+    return make_game_fleet(7, rng) + make_stream_fleet(5, rng)
+
+
+def test_rows_match_per_tenant_apis_bitwise():
+    fleet = mixed_fleet()
+    fb = FleetBatch(fleet)
+    t0, t1 = 240, 553                      # ragged, non-zero-origin window
+    units = np.array([16, 3, 10 ** 6, 7, 1, 2, 9, 16, 4, 8, 5, 16], np.int64)
+    demand = fb.demand_rates(t0, t1)
+    scale = fb.latency_scale(units, t0, t1)
+    for i, w in enumerate(fleet):
+        d = w.demand_rates(t0, t1)
+        s = w.latency_scale(int(units[i]), t0, t1)
+        assert np.array_equal(np.broadcast_to(demand[i], d.shape), d)
+        assert np.array_equal(np.broadcast_to(scale[i], s.shape), s)
+
+
+def test_arrivals_match_and_substreams_advance_identically():
+    fleet = mixed_fleet()
+    fb = FleetBatch(fleet)
+    batch_rngs = [tenant_stream(7, w.name)[0] for w in fleet]
+    solo_rngs = [tenant_stream(7, w.name)[0] for w in fleet]
+    counts = fb.arrival_counts(batch_rngs, 100, 400)
+    for i, w in enumerate(fleet):
+        assert np.array_equal(counts[i], w.arrival_counts(solo_rngs[i],
+                                                          100, 400))
+    # both call patterns must leave every Generator in the same state:
+    # the NEXT draw (e.g. the following chunk) must also agree
+    for a, b in zip(batch_rngs, solo_rngs):
+        assert np.array_equal(a.integers(0, 2 ** 60, 5),
+                              b.integers(0, 2 ** 60, 5))
+
+
+def test_stream_only_fleet_collapses_to_one_column():
+    fb = FleetBatch(make_stream_fleet(6, np.random.default_rng(1)))
+    assert fb.demand_rates(0, 300).shape == (6, 1)
+    assert fb.latency_scale(np.full(6, 16, np.int64), 0, 300).shape == (6, 1)
+
+
+def test_mixed_fleet_expands_to_full_window():
+    fb = FleetBatch(mixed_fleet())
+    assert fb.demand_rates(0, 120).shape == (12, 120)
+
+
+class _CustomWorkload(Workload):
+    """No batch overrides: must ride the generic stacked fallback."""
+
+    def arrival_counts(self, rng, t0, t1):
+        return np.full(t1 - t0, 2, np.int64)
+
+    def demand_rates(self, t0, t1):
+        return np.linspace(1.0, 2.0, t1 - t0)
+
+
+def test_generic_fallback_for_custom_subclass():
+    fleet = [_CustomWorkload(name=f"c{i}", base_latency=0.1,
+                             work_per_request=1.0, unit_rate=1.0)
+             for i in range(3)]
+    fb = FleetBatch(fleet)
+    counts = fb.arrival_counts([None] * 3, 0, 10)
+    assert counts.shape == (3, 10) and (counts == 2).all()
+    assert np.array_equal(fb.demand_rates(0, 10)[1],
+                          fleet[1].demand_rates(0, 10))
+
+
+def test_jax_latency_scale_close_to_numpy():
+    """The jit_scale flag is opt-in and NOT bitwise-guaranteed — pin that
+    it at least agrees to float64 tolerance."""
+    jax = pytest.importorskip("jax")
+    del jax
+    fb = FleetBatch(mixed_fleet())
+    units = np.full(12, 8, np.int64)
+    ref = fb.latency_scale(units, 0, 60)
+    got = fb.latency_scale(units, 0, 60, use_jax=True)
+    np.testing.assert_allclose(got, ref, rtol=1e-12)

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core import (POLICIES, PricingModel, TenantSpec, TenantState,
-                        batch_scores, priority_score)
+                        batch_scores, batch_scores_np, priority_score)
 from repro.core.priority import cdps, sdps, sps, wdps
 from repro.core.types import Quota
 
@@ -110,3 +110,44 @@ def test_batch_scores_matches_scalar_elementwise(policy, pricing):
         [st.spec.pricing == PricingModel.PFP for st in states]))
     # batch path runs in float32 on-device — elementwise up to that precision
     np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-4)
+
+
+# -------------------------------------- batch_scores_np == priority_score
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("pricing", [PricingModel.PFR, PricingModel.PFP,
+                                     PricingModel.HYBRID])
+def test_batch_scores_np_matches_scalar_bitwise(policy, pricing):
+    """The NumPy scorer is what run_round executes every round — it must
+    equal the scalar equations to the last ULP (== not allclose), or
+    priority order (and thus eviction decisions) could silently drift
+    between the batch and reference paths."""
+    rng = np.random.default_rng(99)
+    n = 48
+    states = [
+        mk_state(ordinal=i + 1,
+                 premium=float(rng.random() < 0.5),
+                 age=int(rng.integers(0, 4)),
+                 loyalty=int(rng.integers(0, 6)),
+                 scale=int(rng.integers(0, 5)),
+                 reward=int(rng.integers(0, 3)),
+                 pricing=pricing)
+        for i in range(n)
+    ]
+    # ints for requests/users (as the Monitor reports them), float data
+    requests = [int(x) for x in rng.integers(0, 2000, n)]
+    users = [int(x) for x in rng.integers(0, 100, n)]
+    data_mb = [float(x) for x in rng.uniform(0.0, 50.0, n)]
+
+    expect = [priority_score(policy, st, requests[i], users[i], data_mb[i])
+              for i, st in enumerate(states)]
+    got = batch_scores_np(
+        policy,
+        [st.spec.premium for st in states],
+        [st.ordinal for st in states],
+        [st.age for st in states],
+        [st.loyalty for st in states],
+        requests, users, data_mb,
+        [st.reward_count for st in states],
+        [st.scale_count for st in states],
+        [st.spec.pricing == PricingModel.PFP for st in states])
+    assert [float(g) for g in got] == expect

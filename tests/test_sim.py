@@ -70,3 +70,37 @@ def test_eviction_redirects_to_cloud_latency():
         # evicted tenants keep being serviced (latency array non-empty and
         # includes WAN-penalised requests)
         assert r.latencies.size > 0
+
+
+def test_per_minute_timeline_includes_partial_tail():
+    """Regression: finalize() used to iterate duration_s // 60 windows,
+    silently dropping the final partial minute whenever duration_s was
+    not a multiple of 60."""
+    full = run("game", "none", duration=600)
+    ragged = run("game", "none", duration=630)
+    assert len(full.per_minute_vr) == 10
+    assert len(ragged.per_minute_vr) == 11          # 10 full + 30 s tail
+    # the shared full minutes see the identical trace → identical VRs
+    assert ragged.per_minute_vr[:10] == full.per_minute_vr
+    # the tail window carries real accounting, not a padding zero
+    thirty = run("game", "none", duration=30)
+    assert len(thirty.per_minute_vr) == 1
+    assert thirty.total_requests > 0
+
+
+def test_band_fractions_safe_before_finalize():
+    """Regression: SimResult defaulted latencies/slos to None, so
+    band_fractions raised AttributeError before finalize()."""
+    from repro.sim.edgesim import SimResult
+
+    r = SimResult(policy="sdps", violation_rate=0.0)
+    assert r.latencies.size == 0 and r.slos.size == 0
+    assert r.band_fractions(0.0, 0.8) == 0.0
+
+    rng = np.random.default_rng(42)
+    sim = EdgeNodeSim(make_game_fleet(4, rng),
+                      SimConfig(duration_s=120, round_interval=60,
+                                capacity_units=64, policy="none"))
+    assert sim._result.band_fractions(0.0, 1.0) == 0.0   # pre-run: no crash
+    res = sim.run()
+    assert res.band_fractions(0.0, np.inf) == pytest.approx(1.0)

@@ -1,28 +1,45 @@
 """Seeded determinism + engine equivalence for the Edge-node simulator.
 
-Two guarantees the vectorization refactor must preserve:
+Guarantees the vectorization/fleet-batching refactors must preserve:
 
 * two runs with the same ``SimConfig.seed`` are identical (per-tenant
   RNG substreams are keyed on (seed, crc32(name)) — no process salt);
-* the vectorized engine realises the *same trace* as the scalar
-  per-second reference loop, so violation rates, per-minute timelines,
-  termination lists and even the raw latency arrays agree bitwise.
+* all three engines — the scalar per-second reference loop, the
+  per-tenant vectorized engine, and the fleet-batched (tenants ×
+  seconds) engine — realise the *same trace*, so violation rates,
+  per-minute timelines, termination lists and even the raw latency
+  arrays agree bitwise, at node level and at federation level, for
+  homogeneous and mixed fleets, and for durations that do not divide
+  evenly into minutes or round intervals.
 """
 import numpy as np
 import pytest
 
-from repro.sim import EdgeNodeSim, SimConfig
+from repro.sim import (ENGINES, EdgeFederation, EdgeNodeSim,
+                       FederationConfig, SimConfig)
 from repro.sim.workload import make_game_fleet, make_stream_fleet
 
 
-def fresh_sim(kind: str, engine: str, seed: int) -> EdgeNodeSim:
+def fresh_sim(kind: str, engine: str, seed: int, duration_s: int = 360,
+              round_interval: int = 120) -> EdgeNodeSim:
     rng = np.random.default_rng(42)
     fleet = (make_game_fleet(12, rng) if kind == "game"
              else make_stream_fleet(12, rng))
-    cfg = SimConfig(policy="sdps", duration_s=360, round_interval=120,
+    cfg = SimConfig(policy="sdps", duration_s=duration_s,
+                    round_interval=round_interval,
                     seed=seed, capacity_units=int(490 * 12 / 32),
                     engine=engine)
     return EdgeNodeSim(fleet, cfg)
+
+
+def assert_results_bitwise(a, b):
+    assert a.violation_rate == b.violation_rate       # bitwise, not approx
+    assert a.per_minute_vr == b.per_minute_vr
+    assert a.terminated == b.terminated
+    assert a.total_requests == b.total_requests
+    assert a.total_violations == b.total_violations
+    assert np.array_equal(a.latencies, b.latencies)
+    assert np.array_equal(a.slos, b.slos)
 
 
 @pytest.mark.parametrize("kind", ["game", "fd"])
@@ -41,18 +58,63 @@ def test_different_seed_different_trace():
     assert not np.array_equal(a.latencies, b.latencies)
 
 
+# ------------------------------------------------- three-way equivalence
 @pytest.mark.parametrize("kind", ["game", "fd"])
 @pytest.mark.parametrize("seed", [0, 7])
-def test_vectorized_matches_scalar_bitwise(kind, seed):
+def test_engines_match_scalar_bitwise(kind, seed):
     s = fresh_sim(kind, "scalar", seed).run()
-    v = fresh_sim(kind, "vectorized", seed).run()
-    assert v.violation_rate == s.violation_rate          # bitwise, not approx
-    assert v.per_minute_vr == s.per_minute_vr
-    assert v.terminated == s.terminated
-    assert v.total_requests == s.total_requests
-    assert v.total_violations == s.total_violations
-    assert np.array_equal(v.latencies, s.latencies)
-    assert np.array_equal(v.slos, s.slos)
+    for engine in ("vectorized", "batched"):
+        assert_results_bitwise(fresh_sim(kind, engine, seed).run(), s)
+
+
+@pytest.mark.parametrize("kind", ["game", "fd"])
+def test_engines_match_on_ragged_duration(kind):
+    """duration_s divisible by neither 60 nor round_interval: the final
+    chunk and the final minute window are both partial."""
+    s = fresh_sim(kind, "scalar", 3, duration_s=390, round_interval=140)
+    v = fresh_sim(kind, "vectorized", 3, duration_s=390, round_interval=140)
+    b = fresh_sim(kind, "batched", 3, duration_s=390, round_interval=140)
+    rs, rv, rb = s.run(), v.run(), b.run()
+    assert_results_bitwise(rv, rs)
+    assert_results_bitwise(rb, rs)
+    assert len(rs.per_minute_vr) == 7     # 6 full minutes + 30 s tail
+
+
+def fed_result(engine: str, mixed: bool = False):
+    rng = np.random.default_rng(42)
+    fleet = (make_game_fleet(10, rng) + make_stream_fleet(6, rng)
+             if mixed else make_game_fleet(32, rng))
+    cfg = FederationConfig(n_nodes=4, duration_s=630, round_interval=150,
+                           capacity_units=130, policy="sdps", seed=1,
+                           engine=engine)
+    return EdgeFederation(fleet, cfg).run()
+
+
+@pytest.mark.parametrize("mixed", [False, True],
+                         ids=["game-fleet", "mixed-fleet"])
+def test_federation_engines_match_bitwise(mixed):
+    """Federation-level three-way equivalence, with a ragged duration
+    (630 % 150 != 0) and — for the game fleet — enough contention that
+    Procedure 3 actually terminates and re-places tenants mid-run."""
+    s = fed_result("scalar", mixed)
+    for engine in ("vectorized", "batched"):
+        r = fed_result(engine, mixed)
+        assert r.violation_rate == s.violation_rate
+        assert r.per_node_vr == s.per_node_vr
+        assert r.total_requests == s.total_requests
+        assert r.replaced == s.replaced
+        assert r.cloud == s.cloud
+        for name, nr in r.node_results.items():
+            assert nr.per_minute_vr == s.node_results[name].per_minute_vr
+            assert np.array_equal(nr.latencies,
+                                  s.node_results[name].latencies)
+            assert np.array_equal(nr.slos, s.node_results[name].slos)
+    if not mixed:
+        assert s.replaced, "scenario should exercise re-placement"
+
+
+def test_engines_constant_is_exhaustive():
+    assert set(ENGINES) == {"scalar", "vectorized", "batched"}
 
 
 def test_unknown_engine_rejected():
