@@ -1,5 +1,6 @@
 """Federation benchmarks: engine trio speedup + multi-node policy sweep
-+ fleet-scale (≥1M tenant-second) batched-engine sweep.
++ fleet-scale (≥1M tenant-second) batched-engine sweep
++ control-plane-bound tenants × round_interval sweep (``ctrlscale``).
 
 ``engine_speedup`` measures all three execution engines on the paper's
 32-tenant / 1200 s scenario (identical seeded trace, so the comparison
@@ -19,7 +20,8 @@ import numpy as np
 
 from repro.sim import (SWEEP_POLICIES, EdgeFederation, EdgeNodeSim,
                        FederationConfig, SimConfig, paper_capacity_units)
-from repro.sim.workload import make_game_fleet, make_stream_fleet
+from repro.sim.workload import (StreamWorkload, make_game_fleet,
+                                make_stream_fleet)
 
 
 def _sim(engine: str, tenants: int, duration: int, seed: int) -> EdgeNodeSim:
@@ -176,4 +178,97 @@ def fleet_scale_sweep(quick: bool = False, repeats: int = 2) -> list[dict]:
                 raise AssertionError(
                     f"engine divergence on {row}: batched != vectorized")
             rows.append(row)
+    return rows
+
+
+# ------------------------------------------------------------- control plane
+def _ctrl_fleet(kind: str, n: int):
+    """Three control-plane regimes (fleet, capacity_units, slo_scale):
+
+    * ``idle`` — a dense mostly-idle fleet (0 fps): every round is pure
+      control-plane bookkeeping, the EdgeOS-style dense-cheap-node
+      regime where per-tenant management cost is the whole story;
+    * ``steady`` — every tenant pushes exactly 1 frame/s and sits in the
+      (0.8·SLO, SLO] hold band (low jitter, ample capacity), so rounds
+      classify the whole fleet but change nothing;
+    * ``churn`` — the paper's heterogeneous stream fleet at paper
+      capacity: sustained scale-up/scale-down/eviction traffic.
+    """
+    if kind == "churn":
+        return (make_stream_fleet(n, np.random.default_rng(42)),
+                paper_capacity_units(n), 1.0)
+    fps = 1.0 if kind == "steady" else 0.0
+    fleet = [StreamWorkload(name=f"fd-{i}", base_latency=2.13,
+                            work_per_request=4.0, unit_rate=0.35,
+                            fps=fps, jitter_sigma=0.02)
+             for i in range(n)]
+    return fleet, n * 17, 0.8 if kind == "steady" else 1.0
+
+
+def _ctrl_sim(kind: str, n: int, duration: int, ri: int,
+              control_plane: str) -> EdgeNodeSim:
+    fleet, cap, slo = _ctrl_fleet(kind, n)
+    cfg = SimConfig(policy="sdps", duration_s=duration, round_interval=ri,
+                    capacity_units=cap, default_units=16, slo_scale=slo,
+                    donation_fraction=0.0, seed=7, engine="batched",
+                    control_plane=control_plane)
+    return EdgeNodeSim(fleet, cfg)
+
+
+def _ctrl_results_identical(a, b, sa, sb) -> bool:
+    return bool(
+        a.violation_rate == b.violation_rate
+        and a.per_minute_vr == b.per_minute_vr
+        and a.terminated == b.terminated
+        and a.total_requests == b.total_requests
+        and np.array_equal(a.latencies, b.latencies)
+        and sa.ctrl.snapshot() == sb.ctrl.snapshot())
+
+
+def control_plane_scale(quick: bool = False, repeats: int = 5) -> list[dict]:
+    """``ctrlscale``: rounds/s of the array-native control plane vs the
+    retained reference (pre-array) path, on control-plane-bound
+    scenarios — large tenant counts at fine ``round_interval``, where
+    Procedure-1 rounds and the Monitor feed dominate the wall clock.
+
+    Every row cross-checks that both control planes produce the bitwise
+    identical SimResult and controller snapshot; in quick mode (the CI
+    smoke) a mismatch raises, so control-plane divergence fails the
+    build.
+    """
+    if quick:
+        configs = [("churn", 64, 40, 1), ("steady", 64, 40, 1)]
+        repeats = 1
+    else:
+        configs = [
+            ("idle", 256, 120, 1),
+            ("idle", 512, 120, 1),
+            ("steady", 512, 120, 1),
+            ("churn", 512, 120, 1),
+            ("churn", 512, 300, 5),
+        ]
+    rows = []
+    for kind, n, duration, ri in configs:
+        row = {"scenario": kind, "tenants": n, "duration_s": duration,
+               "round_interval": ri}
+        results, sims = {}, {}
+        for cp in ("reference", "array"):
+            walls = []
+            for _ in range(max(repeats, 1)):
+                sim = _ctrl_sim(kind, n, duration, ri, cp)
+                t0 = time.perf_counter()
+                results[cp] = sim.run()
+                walls.append(time.perf_counter() - t0)
+                sims[cp] = sim
+            row[f"{cp}_wall_s"] = min(walls)
+            row["rounds"] = sims[cp].ctrl.rounds_run
+            row[f"{cp}_rounds_per_s"] = sims[cp].ctrl.rounds_run / min(walls)
+        row["speedup"] = row["reference_wall_s"] / row["array_wall_s"]
+        row["bitwise_identical"] = _ctrl_results_identical(
+            results["reference"], results["array"],
+            sims["reference"], sims["array"])
+        if quick and not row["bitwise_identical"]:
+            raise AssertionError(
+                f"control-plane divergence on {row}: array != reference")
+        rows.append(row)
     return rows

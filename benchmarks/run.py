@@ -3,19 +3,64 @@
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2,fig3,...]
 
 Prints ``name,us_per_call,derived`` CSV rows (plus figure tables) and
-writes results/benchmarks.json.
+writes results/benchmarks.json. Perf-trajectory sections (``fedscale``,
+``ctrlscale``) additionally persist a root-level ``BENCH_<section>.json``
+(machine info + min-of-N walls + throughputs) so future PRs can diff
+their numbers against the ones committed with this tree.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import platform
 import sys
 import time
 
 
 def _csv(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def _machine_info() -> dict:
+    info = {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpus": os.cpu_count(),
+    }
+    try:
+        import numpy
+        info["numpy"] = numpy.__version__
+    except Exception:
+        pass
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    info["cpu_model"] = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    return info
+
+
+def _persist_section(section: str, rows, quick: bool) -> None:
+    """Root-level BENCH_<section>.json: the perf trajectory future PRs
+    diff against. Quick (CI-sized) runs are not comparable walls, so
+    they are never persisted."""
+    if quick:
+        return
+    payload = {
+        "section": section,
+        "machine": _machine_info(),
+        "written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "rows": rows,
+    }
+    path = f"BENCH_{section}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -130,6 +175,22 @@ def main() -> None:
                 f"{r['vectorized_ts_per_s'] / 1e6:.2f}M t-s/s "
                 f"({r['speedup_batched_vs_vectorized']:.1f}x, "
                 f"bitwise={r['bitwise_identical']})")
+        _persist_section("fedscale", rows, args.quick)
+
+    if want("ctrlscale"):
+        from benchmarks import federation_bench
+        rows = federation_bench.control_plane_scale(quick=args.quick)
+        results["ctrlscale"] = rows
+        for r in rows:
+            _csv(
+                f"ctrlscale/{r['scenario']}/{r['tenants']}t/"
+                f"ri{r['round_interval']}",
+                r["array_wall_s"] * 1e6,
+                f"array {r['array_rounds_per_s']:.0f} rounds/s vs "
+                f"reference {r['reference_rounds_per_s']:.0f} rounds/s "
+                f"({r['speedup']:.2f}x, "
+                f"bitwise={r['bitwise_identical']})")
+        _persist_section("ctrlscale", rows, args.quick)
 
     if want("roofline"):
         from benchmarks.roofline_report import roofline_table

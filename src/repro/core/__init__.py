@@ -1,7 +1,8 @@
 """DYVERSE core: the paper's contribution as a composable library."""
-from repro.core.controller import (AdmissionResult, DyverseController,  # noqa: F401
-                                   NullActuator)
-from repro.core.monitor import Monitor, RoundMetrics  # noqa: F401
+from repro.core.controller import (CONTROL_PLANES, AdmissionResult,  # noqa: F401
+                                   DyverseController, NullActuator)
+from repro.core.monitor import (DictMonitor, Monitor, RoundMetrics,  # noqa: F401
+                                SlotTable)
 from repro.core.priority import (POLICIES, batch_scores,  # noqa: F401
                                  batch_scores_np, cdps, priority_score,
                                  sdps, sps, wdps)

@@ -9,18 +9,50 @@ and terminations. In the simulator the actuator adjusts the modelled
 service rate; in the serving engine it adjusts the scheduler's per-tenant
 slot/page quotas (control-plane only — no data movement, which is what
 keeps DYVERSE vertical scaling sub-second at 32+ tenants).
+
+Array-native control plane (``control_plane="array"``, the default):
+:class:`TenantState` stays the API surface, but every per-tenant counter
+the round hot path touches (priority, age, loyalty, reward/scale counts,
+active flag, SLO thresholds, units) lives in slot-aligned numpy columns
+(:class:`_StateCols`) sharing the Monitor's :class:`SlotTable`. Each
+round then
+
+* scores all tenants straight off the arrays (one ``batch_scores_np``
+  call on gathered columns — no per-tenant list building),
+* classifies scale-up / donation-band / scale-down / floor-blocked for
+  the whole fleet with a handful of vectorised comparisons, and
+* keeps only the inherently-sequential eviction cascade of Procedure 2
+  as a loop, fed by the round's presorted (priority, name) order instead
+  of an O(N) victim rescan per eviction.
+
+``control_plane="reference"`` retains the original dict/dataclass loop
+(with :class:`~repro.core.monitor.DictMonitor`) — the two paths are
+bitwise-identical, pinned by the control-plane equivalence tests and the
+``ctrlscale`` benchmark.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Protocol
 
-from repro.core.monitor import Monitor
-from repro.core.priority import POLICIES
+import numpy as np
+
+from repro.core.monitor import DictMonitor, Monitor, SlotTable
+from repro.core.priority import (POLICIES, batch_scores_normalized,
+                                 batch_scores_np)
 from repro.core.quota import NodeCapacity, PoolError, ResourcePool
-from repro.core.types import (Decision, Quota, ResourceUnit, RoundAction,
-                              RoundReport, TenantSpec, TenantState, Weights)
+from repro.core.types import (Decision, PricingModel, Quota, ResourceUnit,
+                              RoundAction, RoundReport, TenantSpec,
+                              TenantState, Weights)
+
+CONTROL_PLANES = ("array", "reference")
+
+
+def _network_always_ok(tenant: str) -> bool:
+    """Default network probe — a sentinel, so the round can tell whether
+    a real callback was installed (even after construction)."""
+    return True
 
 
 class Actuator(Protocol):
@@ -39,6 +71,96 @@ class AdmissionResult:
     reason: str = ""
 
 
+class _StateCols:
+    """Slot-aligned per-tenant controller state (struct-of-arrays twin
+    of the TenantState registry + the spec constants the round needs)."""
+
+    __slots__ = ("premium", "ordinal", "age", "loyalty", "scale", "reward",
+                 "pfp", "priority", "active", "slo", "dthr_slo", "donation",
+                 "min_units", "units")
+    _DTYPES = {"premium": np.float64, "ordinal": np.int64, "age": np.int64,
+               "loyalty": np.int64, "scale": np.int64, "reward": np.int64,
+               "pfp": np.bool_, "priority": np.float64, "active": np.bool_,
+               "slo": np.float64, "dthr_slo": np.float64,
+               "donation": np.bool_, "min_units": np.int64,
+               "units": np.int64}
+
+    def __init__(self, slots: SlotTable):
+        for f in self.__slots__:
+            setattr(self, f, np.zeros(slots.capacity, self._DTYPES[f]))
+        slots.attach(self)
+
+    def _grow_columns(self, cap: int) -> None:
+        for f in self.__slots__:
+            old = getattr(self, f)
+            new = np.zeros(cap, old.dtype)
+            new[: old.size] = old
+            setattr(self, f, new)
+
+
+class _SlotState(TenantState):
+    """TenantState-shaped registry entry whose mutable counters live in
+    the controller's slot-aligned columns. Reads and writes go through
+    to the arrays, so external mutation (tests, tooling) is seen by the
+    vectorised round and vice versa. ``_detach`` freezes the values into
+    the object when the tenant's slot is released (Procedure 3), so a
+    held reference keeps reading its final state, not a reused slot.
+
+    Subclassing keeps ``__dataclass_fields__``, so ``dataclasses.replace``
+    /``asdict`` keep working — a replace() copy is constructed through
+    this ``__init__`` (field-compatible signature) and comes out
+    detached, holding the values read at copy time."""
+
+    def __init__(self, spec: TenantSpec, ordinal: int, quota: Quota,
+                 active: bool = True, age: int = 0, loyalty: int = 0,
+                 scale_count: int = 0, reward_count: int = 0,
+                 priority: float = 0.0, last_vr: float = 0.0, *,
+                 cols: _StateCols | None = None, slot: int = -1):
+        self.spec = spec
+        self.ordinal = ordinal
+        self.quota = quota
+        self.last_vr = last_vr
+        self._cols = cols
+        self._slot = slot if cols is not None else -1
+        # detached-value store; unused while a slot is attached (the
+        # controller writes the live values into the columns at admit)
+        self._det = [age, loyalty, scale_count, reward_count, priority,
+                     active]
+
+    # write-through counters: (column name, detached-store index, cast),
+    # in _det order — _detach() snapshots them in this same order
+    _COUNTERS = (("age", 0, int), ("loyalty", 1, int), ("scale", 2, int),
+                 ("reward", 3, int), ("priority", 4, float),
+                 ("active", 5, bool))
+
+    def _detach(self) -> None:
+        self._det = [self.age, self.loyalty, self.scale_count,
+                     self.reward_count, self.priority, self.active]
+        self._slot = -1
+
+    def _counter_property(col: str, det_i: int, cast):  # noqa: N805
+        def get(self):
+            s = self._slot
+            return (cast(getattr(self._cols, col)[s]) if s >= 0
+                    else self._det[det_i])
+
+        def set_(self, v):
+            if self._slot >= 0:
+                getattr(self._cols, col)[self._slot] = v
+            else:
+                self._det[det_i] = v
+
+        return property(get, set_)
+
+    age = _counter_property(*_COUNTERS[0])
+    loyalty = _counter_property(*_COUNTERS[1])
+    scale_count = _counter_property(*_COUNTERS[2])
+    reward_count = _counter_property(*_COUNTERS[3])
+    priority = _counter_property(*_COUNTERS[4])
+    active = _counter_property(*_COUNTERS[5])
+    del _counter_property
+
+
 class DyverseController:
     def __init__(self, capacity: NodeCapacity,
                  uR: ResourceUnit = ResourceUnit(),
@@ -47,22 +169,60 @@ class DyverseController:
                  actuator: Actuator | None = None,
                  default_units: int = 4,
                  network_ok: Callable[[str], bool] | None = None,
-                 normalize_factors: bool = False):
+                 normalize_factors: bool = False,
+                 control_plane: str = "array"):
         if policy not in POLICIES and policy != "none":
             raise ValueError(f"policy {policy!r} not in {POLICIES + ('none',)}")
+        if control_plane not in CONTROL_PLANES:
+            raise ValueError(
+                f"control_plane {control_plane!r} not in {CONTROL_PLANES}")
         self.pool = ResourcePool(capacity, uR)
-        self.monitor = Monitor()
+        self.control_plane = control_plane
+        if control_plane == "array":
+            self.monitor = Monitor()
+            self._cols: _StateCols | None = _StateCols(self.monitor.slots)
+        else:
+            self.monitor = DictMonitor()
+            self._cols = None
         self.policy = policy
         self.weights = weights
         self.actuator = actuator or NullActuator()
         self.default_units = default_units
-        self.network_ok = network_ok or (lambda t: True)
+        self.network_ok = network_ok or _network_always_ok
         self.normalize_factors = normalize_factors
         self.registry: dict[str, TenantState] = {}
         # Edge Manager's memory of tenants across launches (ageing/loyalty)
         self._history: dict[str, dict[str, int]] = {}
         self._next_ordinal = 1
         self.rounds_run = 0
+        # per-round scratch for the presorted eviction cascade
+        self._round_names: list[str] = []
+        self._round_pri: list[float] = []
+        self._round_vorder: list[int] = []
+        self._round_vptr = 0
+        # registry-order gather cache. Invalidated two ways: the
+        # controller bumps _members_epoch on every admit/terminate
+        # (slot reuse can hand the SAME name list a DIFFERENT slot map,
+        # e.g. terminate a registry suffix and re-admit it in order —
+        # LIFO reuse swaps the slots), and the names list is compared
+        # every round as a backstop against direct registry mutation.
+        self._members_epoch = 0
+        self._dense_key: tuple | None = None
+        self._dense_names: list[str] = []
+        self._dense_idx: np.ndarray | None = None
+        self._dense_names_np: np.ndarray | None = None
+
+    def _dense_index(self) -> tuple[list[str], np.ndarray]:
+        """Registry-insertion-order tenant names + their slot ids."""
+        names = list(self.registry)
+        if (self._members_epoch, names) != self._dense_key:
+            self._dense_key = (self._members_epoch, names)
+            self._dense_names = names
+            self._dense_idx = np.fromiter(
+                (st._slot for st in self.registry.values()), np.intp,
+                len(names))
+            self._dense_names_np = None        # rebuilt lazily on demand
+        return self._dense_names, self._dense_idx
 
     # ------------------------------------------------------------ admission
     def admit(self, spec: TenantSpec, units: int | None = None) -> AdmissionResult:
@@ -76,12 +236,35 @@ class DyverseController:
         except PoolError:
             hist["age"] += 1  # Age_s: rejected by the node
             return AdmissionResult(False, "insufficient resources")
-        st = TenantState(spec=spec, ordinal=self._next_ordinal, quota=quota,
-                         age=hist["age"], loyalty=hist["loyalty"])
+        if self._cols is not None:
+            self.monitor.register(spec.name)        # acquires the slot
+            slot = self.monitor.slots.index[spec.name]
+            st: TenantState = _SlotState(spec, self._next_ordinal, quota,
+                                         cols=self._cols, slot=slot)
+            c = self._cols
+            c.premium[slot] = spec.premium
+            c.ordinal[slot] = self._next_ordinal
+            c.age[slot] = hist["age"]
+            c.loyalty[slot] = hist["loyalty"]
+            c.scale[slot] = 0
+            c.reward[slot] = 0
+            c.pfp[slot] = spec.pricing == PricingModel.PFP
+            c.priority[slot] = 0.0
+            c.active[slot] = True
+            c.slo[slot] = spec.slo_latency
+            c.dthr_slo[slot] = spec.down_threshold * spec.slo_latency
+            c.donation[slot] = spec.donation
+            c.min_units[slot] = spec.min_units
+            c.units[slot] = self.pool.units(spec.name)
+        else:
+            st = TenantState(spec=spec, ordinal=self._next_ordinal,
+                             quota=quota, age=hist["age"],
+                             loyalty=hist["loyalty"])
+            self.monitor.register(spec.name)
         self._next_ordinal += 1
         hist["loyalty"] += 1  # Loyalty_s: used the service
         self.registry[spec.name] = st
-        self.monitor.register(spec.name)
+        self._members_epoch += 1
         self.actuator.apply_quota(spec.name, quota)
         return AdmissionResult(True)
 
@@ -115,32 +298,40 @@ class DyverseController:
         """Procedure 1, line 1. Returns wall-clock overhead (seconds).
 
         Scores all tenants in one vectorised pass — ``batch_scores_np``
-        is bitwise-identical to the scalar ``priority_score``, so the
-        O(N)-loop and the batch produce the same priorities to the last
-        ULP (pinned by the priority regression tests)."""
+        is bitwise-identical to the scalar ``priority_score``, so both
+        control planes produce the same priorities to the last ULP
+        (pinned by the priority regression tests). The array path feeds
+        the scorer gathered slot columns directly (no per-tenant list
+        building) and the scores land straight in the priority column."""
         t0 = time.perf_counter()
         policy = self.policy if self.policy != "none" else "sps"
         if self.registry:
-            from repro.core.priority import batch_scores_np
-            from repro.core.types import PricingModel
-            scorer = batch_scores_np
-            if self.normalize_factors:
-                from repro.core.priority import batch_scores_normalized
-                scorer = batch_scores_normalized
-            names = list(self.registry)
-            sts = [self.registry[n] for n in names]
-            ms = [self.monitor.prev(n) for n in names]
-            scores = scorer(
-                policy,
-                [s.spec.premium for s in sts], [s.ordinal for s in sts],
-                [s.age for s in sts], [s.loyalty for s in sts],
-                [m.requests for m in ms], [m.users for m in ms],
-                [m.data_mb for m in ms], [s.reward_count for s in sts],
-                [s.scale_count for s in sts],
-                [s.spec.pricing == PricingModel.PFP for s in sts],
-                self.weights)
-            for st, sc in zip(sts, scores):
-                st.priority = float(sc)
+            scorer = (batch_scores_normalized if self.normalize_factors
+                      else batch_scores_np)
+            if self._cols is not None:
+                c = self._cols
+                _, idx = self._dense_index()
+                prev = self.monitor._prev
+                c.priority[idx] = scorer(
+                    policy, c.premium[idx], c.ordinal[idx], c.age[idx],
+                    c.loyalty[idx], prev.requests[idx], prev.users[idx],
+                    prev.data_mb[idx], c.reward[idx], c.scale[idx],
+                    c.pfp[idx], self.weights)
+            else:
+                names = list(self.registry)
+                sts = [self.registry[n] for n in names]
+                ms = [self.monitor.prev(n) for n in names]
+                scores = scorer(
+                    policy,
+                    [s.spec.premium for s in sts], [s.ordinal for s in sts],
+                    [s.age for s in sts], [s.loyalty for s in sts],
+                    [m.requests for m in ms], [m.users for m in ms],
+                    [m.data_mb for m in ms], [s.reward_count for s in sts],
+                    [s.scale_count for s in sts],
+                    [s.spec.pricing == PricingModel.PFP for s in sts],
+                    self.weights)
+                for st, sc in zip(sts, scores):
+                    st.priority = float(sc)
         return time.perf_counter() - t0
 
     def run_round(self) -> RoundReport:
@@ -152,6 +343,200 @@ class DyverseController:
         report.priority_update_s = self.update_priorities()
 
         t0 = time.perf_counter()
+        if self._cols is not None:
+            self._scaling_round_array(report)
+        else:
+            self._scaling_round_reference(metrics, report)
+        report.scaling_s = time.perf_counter() - t0
+        self.rounds_run += 1
+        self.pool.check_invariants()
+        return report
+
+    # ---- array control plane -------------------------------------------
+    def _scaling_round_array(self, report: RoundReport) -> None:
+        """Vectorised Procedure 1: the scale-up / donation-band /
+        scale-down / floor classification is computed for all tenants at
+        once from the previous-round columns; only the priority-ordered
+        walk (whose pool mutations are order-dependent) and Procedure 2's
+        eviction cascade remain loops."""
+        reg = self.registry
+        if not reg:
+            return
+        names, idx = self._dense_index()
+        n = len(names)
+        c = self._cols
+        prev = self.monitor._prev
+        req = prev.requests[idx]
+        has = req > 0
+        pri = c.priority[idx]
+        # decision classes: 1 scale-up, 2 donated scale-down, 3 NONE,
+        # 4 plain scale-down; floor-blocked scale-downs collapse to NONE
+        # (a tenant's own units cannot change before its turn, so the
+        # round-start floor check is exact)
+        cls = np.full(n, 4, np.int8)
+        vr = None
+        ups_any = False
+        if has.any():
+            reqf = req.astype(np.float64)
+            # aL_s and VR_s, elementwise — the identical float64 divisions
+            # the RoundMetrics properties perform per tenant
+            aL = np.zeros(n, np.float64)
+            np.divide(prev.lat_sum[idx], reqf, out=aL, where=has)
+            vr = np.zeros(n, np.float64)
+            np.divide(prev.violations[idx].astype(np.float64), reqf,
+                      out=vr, where=has)
+            up = has & (aL > c.slo[idx])
+            band = has & ~up & (aL > c.dthr_slo[idx])
+            cls[up] = 1
+            cls[band] = np.where(c.donation[idx][band], 2, 3)
+            ups_any = bool(up.any())
+        # (an idle round — no requests anywhere — takes the plain
+        # scale-down branch fleet-wide, as the scalar loop does)
+        at_floor = c.units[idx] <= c.min_units[idx]
+        cls[at_floor & ((cls == 2) | (cls == 4))] = 3
+
+        # processing order: stable descending priority (ties keep registry
+        # insertion order, as sorted(reverse=True) does)
+        order_l = np.argsort(-pri, kind="stable").tolist()
+        pri_l = pri.tolist()
+        # probed per round, not cached: network_ok is a public attribute
+        # and may be (re)assigned after construction
+        check_net = self.network_ok is not _network_always_ok
+        append = report.actions.append
+        if not ups_any and not check_net and bool(c.active[idx].all()):
+            # no scale-up and nothing terminable → membership is stable
+            # for the whole round; the walk is a straight dispatch
+            hold = Decision.NONE
+            if not np.any(cls != 3):
+                # steady state: every tenant holds — bulk-build the NONE
+                # actions in priority order
+                report.actions.extend(
+                    [RoundAction(names[k], hold, 0, pri_l[k])
+                     for k in order_l])
+                return
+            cls_l = cls.tolist()
+            sts = list(reg.values())
+            units_l = c.units[idx].tolist()
+            for k in order_l:
+                st = sts[k]
+                if not st.active:
+                    # an actuator callback flipped the flag mid-round —
+                    # the reference loop reads it at each turn, so must we
+                    self._terminate(names[k], report,
+                                    reason="network/inactive")
+                elif cls_l[k] == 3:
+                    append(RoundAction(names[k], hold, 0, pri_l[k]))
+                else:
+                    self._scale_down_fast(names[k], st, report,
+                                          donated=cls_l[k] == 2,
+                                          priority=pri_l[k],
+                                          units=units_l[k])
+            return
+        # general path: evictions possible — victims come presorted by
+        # ascending (priority, name), as min() over tuples picks
+        cls_l = cls.tolist()
+        sts = list(reg.values())
+        units_l = c.units[idx].tolist()   # round-start units: a tenant's
+        #                                   own units cannot change before
+        #                                   its turn, so these stay exact
+        if self._dense_names_np is None:
+            self._dense_names_np = np.array(names)
+        self._round_names = names
+        self._round_pri = pri_l
+        self._round_vorder = np.lexsort((self._dense_names_np, pri)).tolist()
+        self._round_vptr = 0
+        vr_l = vr.tolist() if vr is not None else [0.0] * n
+        for k in order_l:
+            name = names[k]
+            if name not in reg:                 # evicted earlier this round
+                continue
+            st = sts[k]
+            # active is read live at each turn (not from a round-start
+            # snapshot): callbacks may flip it mid-round, and the
+            # reference loop would see that
+            if not st.active or (check_net and not self.network_ok(name)):
+                self._terminate(name, report, reason="network/inactive")
+                continue
+            kls = cls_l[k]
+            if kls == 3:
+                append(RoundAction(name, Decision.NONE, priority=pri_l[k]))
+            elif kls == 1:
+                st.last_vr = vr_l[k]
+                self._scale_up_presorted(k, name, st, vr_l[k], units_l[k],
+                                         report)
+            else:
+                self._scale_down_fast(name, st, report, donated=kls == 2,
+                                      priority=pri_l[k], units=units_l[k])
+
+    def _next_victim(self, exclude_k: int) -> int | None:
+        """Lowest-(priority, name) live tenant this round, excluding the
+        scaler itself. The cursor advances permanently past terminated
+        entries, so a whole round's eviction cascade costs O(N) total
+        instead of O(N) per eviction."""
+        vorder, names = self._round_vorder, self._round_names
+        reg = self.registry
+        p = self._round_vptr
+        nv = len(vorder)
+        while p < nv and names[vorder[p]] not in reg:
+            p += 1
+        self._round_vptr = p
+        if p >= nv:
+            return None
+        j = vorder[p]
+        if j != exclude_k:
+            return j
+        q = p + 1                   # peek past the excluded scaler only
+        while q < nv and names[vorder[q]] not in reg:
+            q += 1
+        return vorder[q] if q < nv else None
+
+    def _scale_up_presorted(self, k: int, name: str, st: TenantState,
+                            vr: float, r_units: int,
+                            report: RoundReport) -> None:
+        """Procedure 2, scaleup branch: aR_s = R_s · VR_s (≥1 unit), with
+        victims drawn from the round's presorted priority order."""
+        want = max(1, round(r_units * vr))
+        freed_for: str | None = None
+        my_pri = self._round_pri[k]
+        while self.pool.free_units < want:
+            j = self._next_victim(k)
+            # paper Procedure 2 line 10: stop at "index of s" — only tenants
+            # with strictly lower priority may be evicted
+            if j is None or self._round_pri[j] >= my_pri:
+                break
+            victim = self._round_names[j]
+            self._terminate(victim, report, reason=f"evicted for {name}")
+            freed_for = victim
+        grant = min(want, self.pool.free_units)
+        if grant > 0:
+            st.quota = self.pool.grow(name, grant)
+            cols, slot = self._cols, st._slot
+            cols.scale[slot] += 1            # Scale_s penalty accounting
+            cols.units[slot] = r_units + grant
+            self.actuator.apply_quota(name, st.quota)
+        report.actions.append(RoundAction(name, Decision.SCALE_UP, grant,
+                                          my_pri, terminated_for=freed_for))
+
+    def _scale_down_fast(self, name: str, st: TenantState,
+                         report: RoundReport, *, donated: bool,
+                         priority: float, units: int) -> None:
+        """Procedure 2, scaledown branch (array path): the floor check
+        already ran vectorised, so this always removes one uR."""
+        st.quota = self.pool.shrink(name, 1)
+        cols, slot = self._cols, st._slot
+        if donated:
+            cols.reward[slot] += 1           # Reward_s credit; donation scaling is NOT penalised
+        else:
+            cols.scale[slot] += 1            # Scale_s penalty accounting
+        cols.units[slot] = units - 1
+        self.actuator.apply_quota(name, st.quota)
+        report.actions.append(RoundAction(name, Decision.SCALE_DOWN, 1,
+                                          priority))
+
+    # ---- reference control plane ----------------------------------------
+    def _scaling_round_reference(self, metrics, report: RoundReport) -> None:
+        """The original per-tenant dict/dataclass loop, retained verbatim
+        as the bitwise reference for the array path."""
         order = sorted(self.registry, key=lambda n: self.registry[n].priority,
                        reverse=True)
         for name in order:
@@ -177,10 +562,6 @@ class DyverseController:
                                                       priority=st.priority))
             else:
                 self._scale_down(name, st, report, donated=False)
-        report.scaling_s = time.perf_counter() - t0
-        self.rounds_run += 1
-        self.pool.check_invariants()
-        return report
 
     def _scale_up(self, name: str, st: TenantState, vr: float,
                   report: RoundReport) -> None:
@@ -234,8 +615,11 @@ class DyverseController:
         """Procedure 3: migrate users/state to the Cloud, destroy tenant."""
         self.actuator.terminate(name)        # engine flushes KV, redirects users
         self.pool.release(name)
+        st = self.registry.pop(name, None)
+        self._members_epoch += 1
+        if isinstance(st, _SlotState):
+            st._detach()                     # before the slot is freed
         self.monitor.forget(name)
-        self.registry.pop(name, None)
         hist = self._history.setdefault(name, {"age": 0, "loyalty": 0})
         hist["age"] += 1                     # future re-admission gets priority
         report.terminated.append(name)

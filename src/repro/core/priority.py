@@ -148,8 +148,6 @@ def batch_scores_normalized(policy: str, premium, ordinal, age, loyalty,
     to [0,1] across tenants before the linear combination, which makes the
     community/system terms mechanically comparable to the workload terms.
     """
-    import numpy as np
-
     def norm(x):
         x = np.asarray(x, np.float64)
         m = x.max()

@@ -33,6 +33,14 @@ class ResourcePool:
         # recounts from scratch and cross-checks these totals.
         self._used_slots = 0
         self._used_pages = 0
+        # per-tenant R_s in uR units, maintained on every mutation so the
+        # round hot path's ``units()`` probe skips the Quota division math
+        # (cross-checked by check_invariants)
+        self._units: dict[str, int] = {}
+        # mutation epoch: invariants cannot break without a mutation, so
+        # check_invariants() is a no-op between changes
+        self._mutations = 0
+        self._checked_at = -1
 
     # ---- views
     @property
@@ -43,13 +51,19 @@ class ResourcePool:
 
     @property
     def free_units(self) -> int:
-        return self.free.units(self.uR)
+        # same integer math as self.free.units(self.uR), without building
+        # the intermediate Quota — Procedure 2 probes this in its loop
+        uR = self.uR
+        return min((self.capacity.slots - self._used_slots)
+                   // (uR.slots if uR.slots > 0 else 1),
+                   (self.capacity.pages - self._used_pages)
+                   // (uR.pages if uR.pages > 0 else 1))
 
     def quota(self, tenant: str) -> Quota:
         return self._alloc[tenant]
 
     def units(self, tenant: str) -> int:
-        return self._alloc[tenant].units(self.uR)
+        return self._units[tenant]
 
     def tenants(self) -> list[str]:
         return list(self._alloc)
@@ -62,8 +76,9 @@ class ResourcePool:
         per-tenant units take a min across dimensions, and a sum of
         mins only equals the min of sums while every quota is a whole
         uR multiple — an invariant worth not betting placement on.
-        O(N), but only placement probes pay it."""
-        return sum(q.units(self.uR) for q in self._alloc.values())
+        O(N) over the cached per-tenant units; only placement probes
+        pay it."""
+        return sum(self._units.values())
 
     def can_admit(self, units: int) -> bool:
         """Feasibility probe: would ``admit`` succeed right now?"""
@@ -80,8 +95,10 @@ class ResourcePool:
         if q.slots > f.slots or q.pages > f.pages:
             raise PoolError(f"admit {tenant}: need {q}, free {f}")
         self._alloc[tenant] = q
+        self._units[tenant] = q.units(self.uR)
         self._used_slots += q.slots
         self._used_pages += q.pages
+        self._mutations += 1
         return q.copy()
 
     def grow(self, tenant: str, units: int) -> Quota:
@@ -90,28 +107,64 @@ class ResourcePool:
         f = self.free
         if add.slots > f.slots or add.pages > f.pages:
             raise PoolError(f"grow {tenant} by {units}u: need {add}, free {f}")
-        self._alloc[tenant] = Quota(q.slots + add.slots, q.pages + add.pages)
+        new = Quota(q.slots + add.slots, q.pages + add.pages)
+        self._alloc[tenant] = new
+        # growth is never clamped → unit count rises by exactly units
+        # (same integer identities as the shrink fast path)
+        self._units[tenant] += units
         self._used_slots += add.slots
         self._used_pages += add.pages
-        return self._alloc[tenant].copy()
+        self._mutations += 1
+        return new.copy()
 
     def shrink(self, tenant: str, units: int) -> Quota:
         q = self._alloc[tenant]
-        new = q.sub_units(units, self.uR)
+        ds, dp = units * self.uR.slots, units * self.uR.pages
+        if ds <= q.slots and dp <= q.pages:
+            # un-clamped: both dimensions drop by exactly units·uR, so the
+            # unit count drops by exactly units (⌊(a−n·s)/s⌋ = ⌊a/s⌋−n and
+            # min(a−n, b−n) = min(a,b)−n are integer identities) — the
+            # same result sub_units + units() re-derive, minus the math
+            new = Quota(q.slots - ds, q.pages - dp)
+            self._units[tenant] -= units
+        else:
+            new = q.sub_units(units, self.uR)
+            self._units[tenant] = new.units(self.uR)
         self._alloc[tenant] = new
         self._used_slots -= q.slots - new.slots
         self._used_pages -= q.pages - new.pages
+        self._mutations += 1
         return new.copy()
 
     def release(self, tenant: str) -> Quota:
         q = self._alloc.pop(tenant)
+        self._units.pop(tenant, None)
         self._used_slots -= q.slots
         self._used_pages -= q.pages
+        self._mutations += 1
         return q
 
-    def check_invariants(self) -> None:
-        used_s = sum(q.slots for q in self._alloc.values())
-        used_p = sum(q.pages for q in self._alloc.values())
+    def check_invariants(self, deep: bool = False) -> None:
+        """Recount Σ_s R_s and cross-check the running totals (every
+        round); ``deep`` additionally re-derives every tenant's cached
+        unit count (property tests). A no-op when nothing has mutated
+        since the last check — invariants cannot break without one."""
+        if self._mutations == self._checked_at and not deep:
+            return
+        checked = self._mutations        # committed only if checks pass:
+        used_s = used_p = 0              # a detected violation must keep
+        #                                  raising on re-probe
+        for t, q in self._alloc.items():
+            used_s += q.slots
+            used_p += q.pages
+            if q.slots < 0 or q.pages < 0:
+                raise PoolError(f"negative quota for {t}: {q}")
+        if deep:
+            for t, q in self._alloc.items():
+                if self._units[t] != q.units(self.uR):
+                    raise PoolError(
+                        f"units cache drifted for {t}: {self._units[t]} "
+                        f"vs recount {q.units(self.uR)}")
         if (used_s, used_p) != (self._used_slots, self._used_pages):
             raise PoolError(
                 f"running totals drifted: {self._used_slots}/"
@@ -119,6 +172,4 @@ class ResourcePool:
         f = self.free
         if f.slots < 0 or f.pages < 0:
             raise PoolError(f"overcommitted: free {f}")
-        for t, q in self._alloc.items():
-            if q.slots < 0 or q.pages < 0:
-                raise PoolError(f"negative quota for {t}: {q}")
+        self._checked_at = checked

@@ -45,7 +45,7 @@ class ResourceUnit:
     pages: int = 8
 
 
-@dataclass
+@dataclass(slots=True)
 class Quota:
     """R_s — resources currently allocated to a tenant."""
 
@@ -98,7 +98,7 @@ class TenantState:
     last_vr: float = 0.0                # VR_s from previous round
 
 
-@dataclass
+@dataclass(slots=True)
 class RoundAction:
     tenant: str
     decision: Decision
@@ -107,7 +107,7 @@ class RoundAction:
     terminated_for: str | None = None   # set when evicted to free resources
 
 
-@dataclass
+@dataclass(slots=True)
 class RoundReport:
     """One dynamic-vertical-scaling round (Procedure 1)."""
 

@@ -26,6 +26,11 @@ floating-point expressions element for element, so their violation
 rates, per-minute timelines, and termination lists are bitwise
 identical — only wall-clock differs.
 
+Orthogonally, ``SimConfig.control_plane`` selects the controller
+implementation: ``"array"`` (default, struct-of-arrays Monitor +
+vectorised rounds) or ``"reference"`` (the retained dict/dataclass
+path) — also bitwise-identical, pinned by tests/test_control_plane.py.
+
 Reproduces: Fig. 3 (violation-rate timeline), Figs. 4/5 (violation rate
 vs #tenants × SLO), Figs. 6/7 (latency distributions), and the overhead
 measurements of Fig. 2 (controller wall-clock per round).
@@ -76,7 +81,10 @@ class SimConfig:
     normalize_factors: bool = False  # beyond-paper mode (see core.priority)
     engine: str = "vectorized"        # "scalar" | "vectorized" | "batched"
     jit_scale: bool = False           # batched engine: jax-jit the latency
-    seed: int = 0                     # scale (fast, NOT bitwise-guaranteed)
+    #                                   scale (fast, NOT bitwise-guaranteed)
+    control_plane: str = "array"      # "array" | "reference" controller path
+    rng_workers: int = 2              # batched engine: jitter-draw pool size
+    seed: int = 0
 
 
 @dataclass
@@ -159,6 +167,7 @@ class EdgeNodeSim:
             default_units=cfg.default_units,
             actuator=_SimActuator(self),
             normalize_factors=cfg.normalize_factors,
+            control_plane=cfg.control_plane,
         )
         # run-state accumulators (chunk API)
         self._result = SimResult(policy=cfg.policy, violation_rate=0.0)
@@ -369,21 +378,28 @@ class EdgeNodeSim:
         return self.finalize()
 
 
-_RNG_WORKER = None
+_RNG_POOLS: dict[int, object] = {}
+# below this many draws per chunk, drawing jitter inline beats the
+# worker-thread handoff (wall-clock only — the bitstreams are identical)
+_JITTER_OVERLAP_MIN = 4096
+_EMPTY_F8 = np.empty(0)
 
 
-def _rng_worker():
-    """Process-wide single-thread executor for overlapped RNG fills —
-    shared across steppers so short-lived simulators don't each pin an
-    idle thread. Steppers run one chunk at a time, so queued fills
-    never interleave within a Generator."""
-    global _RNG_WORKER
-    if _RNG_WORKER is None:
+def _rng_pool(workers: int):
+    """Process-wide executors for overlapped RNG fills, keyed by pool
+    size (``SimConfig.rng_workers``) — shared across steppers so
+    short-lived simulators don't each pin idle threads. A stepper runs
+    one chunk at a time and each Generator is owned by exactly one
+    submitted range, so queued fills never interleave within a
+    Generator."""
+    pool = _RNG_POOLS.get(workers)
+    if pool is None:
         from concurrent.futures import ThreadPoolExecutor
 
-        _RNG_WORKER = ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="repro-sim-rng")
-    return _RNG_WORKER
+        pool = ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="repro-sim-rng")
+        _RNG_POOLS[workers] = pool
+    return pool
 
 
 class FleetStepper:
@@ -410,17 +426,37 @@ class FleetStepper:
     any node's fleet membership changes (``_fleet_epoch``), which is how
     federation re-placement stays cheap between round boundaries.
 
-    Jitter draws run on a single worker thread, overlapped with the
-    deterministic matrix math on the main thread: NumPy's Generator
-    releases the GIL while filling, each Generator is touched by exactly
-    one thread, and the per-tenant call sequence is unchanged — so the
-    overlap changes wall-clock only, never the bitstream.
+    Jitter draws run on a small worker-thread pool
+    (``SimConfig.rng_workers``), overlapped with the deterministic
+    matrix math on the main thread: NumPy's Generator releases the GIL
+    while filling, the fleet is split into contiguous tenant ranges so
+    each Generator is touched by exactly one thread, and the per-tenant
+    call sequence is unchanged — so the overlap changes wall-clock only,
+    never the bitstream.
+
+    Monitor feed: when a node's controller runs the array control plane,
+    the whole chunk's per-tenant reductions land as ONE
+    ``Monitor.add_chunk`` sliced array-add per node (slot ids cached per
+    fleet epoch); reference-control-plane nodes keep the per-tenant
+    ``record_batch_sums`` loop. Per-tenant latency sums stay the exact
+    reductions ``record_batch`` performs: segments of ≤2 requests reduce
+    to the elements themselves (bitwise equal to a slice ``.sum()``, so
+    fine-``round_interval`` chunks vectorise fully) and longer segments
+    keep the per-tenant pairwise ``.sum()``.
     """
 
     def __init__(self, nodes: list[EdgeNodeSim]):
         self.nodes = nodes
         self._epochs: tuple | None = None
         self._use_jax = any(n.cfg.jit_scale for n in nodes)
+        # overlap needs spare cores: workers beyond cores−1 just fight
+        # the main thread for the GIL (measurably slower on 2-core CI)
+        import os
+
+        cfg_workers = max(1, max(
+            (n.cfg.rng_workers for n in nodes), default=1))
+        self._rng_workers = max(1, min(cfg_workers,
+                                       (os.cpu_count() or 2) - 1))
 
     def _rebuild(self) -> None:
         entries = []
@@ -436,6 +472,7 @@ class FleetStepper:
         self._batch = FleetBatch([wl for _, _, wl in entries])
         self._arr_rngs = [node.tenant_rngs[name][0]
                           for node, name, _ in entries]
+        self._batch.bind_rngs(self._arr_rngs)
         self._jit_rngs = [node.tenant_rngs[name][1]
                           for node, name, _ in entries]
         # membership-stable per-tenant metadata, gathered once per epoch
@@ -443,11 +480,74 @@ class FleetStepper:
         self._slos = np.array([node.cfg.slo_scale * wl.base_latency
                                for node, _, wl in entries], np.float64)
         self._data_mb = [wl.data_per_request_mb for _, _, wl in entries]
-        self._monitors = [node.ctrl.monitor for node, _, _ in entries]
+        self._data_mb_arr = np.asarray(self._data_mb, np.float64)
+        # array-control-plane nodes take the O(1)-per-chunk add_chunk
+        # feed; slot ids stay valid within an epoch (evictions only free
+        # slots, and any (re)admission bumps the epoch → rebuild)
+        self._node_array_feed = [
+            hasattr(node.ctrl.monitor, "add_chunk") for node in self.nodes]
+        self._slot_ids = np.array(
+            [getattr(node.ctrl.monitor, "slots", None).index.get(name, -1)
+             if hasattr(node.ctrl.monitor, "slots") else -1
+             for node, name, _ in entries], np.int64)
+        self._evict_key: tuple | None = None
+        self._evicted_arr: np.ndarray | None = None
 
-    def _draw_jitter(self, totals_l: list) -> list:
-        return [wl.draw_jitter(self._jit_rngs[i], totals_l[i])
-                for i, (_, _, wl) in enumerate(self._entries)]
+    def _evicted_mask(self) -> np.ndarray:
+        """(T,) bool eviction mask. Within a fleet epoch the evicted sets
+        only grow (shrinking goes through remove_tenant, which bumps the
+        epoch and rebuilds), so their sizes are a sufficient change key."""
+        key = tuple(len(n.evicted) for n in self.nodes)
+        if key != self._evict_key:
+            self._evicted_arr = np.array(
+                [name in node.evicted for node, name, _ in self._entries],
+                bool)
+            self._evict_key = key
+        return self._evicted_arr
+
+    def _units_vector(self, evicted: np.ndarray) -> np.ndarray:
+        """Per-row allocated units: array-control-plane nodes gather the
+        controller's slot-aligned units column (the same values the
+        actuator writes into ``EdgeNodeSim.units``); reference nodes keep
+        the per-tenant probe. Evicted rows get Cloud capacity."""
+        units = np.empty(len(self._entries), np.int64)
+        for node, sl, feed in zip(self.nodes, self._node_slices,
+                                  self._node_array_feed):
+            if sl.stop == sl.start:
+                continue
+            if feed:
+                units[sl] = node.ctrl._cols.units[self._slot_ids[sl]]
+            else:
+                units[sl] = [node._tenant_units(name)
+                             for _, name, _ in self._entries[sl]]
+        units[evicted] = CLOUD_UNITS
+        return units
+
+    def _draw_jitter_range(self, lo: int, hi: int, totals_l: list) -> list:
+        # a size-0 draw consumes no bitstream, so tenants with no
+        # arrivals this chunk skip the Generator call entirely — at fine
+        # round_interval that is most of the fleet, and it is bitwise-free
+        return [wl.draw_jitter(self._jit_rngs[i], n) if n else _EMPTY_F8
+                for i, ((_, _, wl), n) in enumerate(
+                    zip(self._entries[lo:hi], totals_l[lo:hi]), lo)]
+
+    def _submit_jitter(self, totals_l: list, totals: np.ndarray,
+                       total: int) -> list:
+        """Split the fleet into ≤``rng_workers`` contiguous ranges,
+        balanced by draw count, and submit each as one task. Each
+        Generator is drawn by exactly one task with the per-tenant call
+        sequence unchanged, so the split never affects the bitstreams."""
+        T = len(totals_l)
+        w = min(self._rng_workers, T)
+        pool = _rng_pool(self._rng_workers)
+        if w <= 1:
+            return [pool.submit(self._draw_jitter_range, 0, T, totals_l)]
+        cum = np.cumsum(totals)
+        targets = np.arange(1, w) * (total / w)
+        bounds = [0, *(np.searchsorted(cum, targets, side="left") + 1), T]
+        bounds = sorted(set(int(min(b, T)) for b in bounds))
+        return [pool.submit(self._draw_jitter_range, lo, hi, totals_l)
+                for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo]
 
     def step(self, t0: int, t1: int) -> None:
         epochs = tuple(n._fleet_epoch for n in self.nodes)
@@ -462,13 +562,15 @@ class FleetStepper:
         totals = counts.sum(axis=1)
         totals_l = totals.tolist()
         # jitter draws overlap the deterministic math below (see class
-        # docstring); the worker owns every jitter Generator until the
-        # future resolves
-        jitter_fut = _rng_worker().submit(self._draw_jitter, totals_l)
-        units = np.array([node._tenant_units(name)
-                          for node, name, _ in entries], np.int64)
-        evicted = np.array([name in node.evicted
-                            for node, name, _ in entries], bool)
+        # docstring); each worker owns its range's jitter Generators
+        # until its future resolves. Tiny chunks (fine round_interval)
+        # draw inline instead — thread handoff + GIL churn there costs
+        # more than the draws, and the draw order is unchanged either way
+        total_draws = int(totals.sum())
+        jitter_futs = (self._submit_jitter(totals_l, totals, total_draws)
+                       if total_draws >= _JITTER_OVERLAP_MIN else None)
+        evicted = self._evicted_mask()
+        units = self._units_vector(evicted)
         scale = self._batch.latency_scale(units, t0, t1,
                                           use_jax=self._use_jax)
         # per-request deterministic factor: repeat each (tenant, second)
@@ -483,7 +585,13 @@ class FleetStepper:
         # per-tenant extents on the flat request axis
         starts = np.zeros(T + 1, np.int64)
         np.cumsum(totals, out=starts[1:])
-        jit_parts = jitter_fut.result()
+        if jitter_futs is not None:
+            jit_parts = [p for f in jitter_futs for p in f.result()]
+        elif total_draws:
+            jit_parts = self._draw_jitter_range(0, T, totals_l)
+        else:
+            jit_parts = []        # nothing arrived: no Generator is owed
+        #                           a draw, so skip the fleet walk entirely
         lat = per_req * (np.concatenate(jit_parts) if jit_parts
                          else np.empty(0))
         # per-(tenant, second) violation tallies, exactly: only the
@@ -520,14 +628,40 @@ class FleetStepper:
                 node._all_slo.append(slo_rep[seg])
         starts_l = starts.tolist()
         viol_l = viol_t.tolist()
-        evicted_l = evicted.tolist()
-        monitors = self._monitors
-        for i, (node, name, wl) in enumerate(entries):
-            if evicted_l[i]:
+        # per-tenant latency sums, feeding the Monitors: segments of ≤2
+        # requests are the elements themselves (bitwise equal to the
+        # slice .sum() — so fine-round_interval chunks vectorise fully);
+        # longer segments keep the per-tenant pairwise .sum(). Evicted
+        # rows already carry the WAN penalty but are never fed.
+        lat_sums = np.zeros(T, np.float64)
+        if lat.size:
+            p = starts[:T]
+            small = totals <= 2
+            sel = small & (totals >= 1)
+            lat_sums[sel] = lat[p[sel]]
+            sel = totals == 2
+            lat_sums[sel] += lat[p[sel] + 1]
+            for i in np.flatnonzero(~small & live).tolist():
+                lat_sums[i] = lat[starts_l[i]:starts_l[i + 1]].sum()
+        for ni, (node, sl) in enumerate(zip(self.nodes, self._node_slices)):
+            if sl.stop == sl.start:
                 continue
+            rows = np.flatnonzero(live[sl]) + sl.start
+            if rows.size == 0:
+                continue
+            mon = node.ctrl.monitor
+            rows_l = rows.tolist()
             # users() is re-read every chunk, like the other engines do —
             # a subclass may report a time-varying user count
-            monitors[i].record_batch_sums(
-                name, totals_l[i],
-                float(lat[starts_l[i]:starts_l[i + 1]].sum()), viol_l[i],
-                totals_l[i] * self._data_mb[i], users=wl.users())
+            if self._node_array_feed[ni]:
+                users = np.array([entries[i][2].users() for i in rows_l],
+                                 np.int64)
+                mon.add_chunk(self._slot_ids[rows], totals[rows],
+                              lat_sums[rows], viol_t[rows],
+                              totals[rows] * self._data_mb_arr[rows], users)
+            else:
+                for i in rows_l:
+                    _, name, wl = entries[i]
+                    mon.record_batch_sums(
+                        name, totals_l[i], float(lat_sums[i]), viol_l[i],
+                        totals_l[i] * self._data_mb[i], users=wl.users())

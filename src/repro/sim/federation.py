@@ -66,6 +66,8 @@ class FederationConfig:
     pricing: PricingModel = PricingModel.HYBRID
     normalize_factors: bool = False
     engine: str = "vectorized"
+    control_plane: str = "array"       # "array" | "reference" (per node)
+    rng_workers: int = 2               # batched engine: jitter-draw pool
     seed: int = 0
 
     def node_sim_config(self, i: int) -> SimConfig:
@@ -81,6 +83,8 @@ class FederationConfig:
             pricing=self.pricing,
             normalize_factors=self.normalize_factors,
             engine=self.engine,
+            control_plane=self.control_plane,
+            rng_workers=self.rng_workers,
             seed=self.seed,
         )
 

@@ -70,6 +70,10 @@ class Workload:
     # the (0.8·SLO, SLO] donation band
     provisioned_factor: float = 0.72
 
+    # classes whose demand_rates never varies with t declare it here, so
+    # FleetBatch may cache their (G, 1) demand column across chunks
+    demand_time_invariant = False
+
     def users(self) -> int:
         return 1
 
@@ -213,6 +217,7 @@ class StreamWorkload(Workload):
     timeline yields the identical frame schedule."""
 
     fps: float = 0.5
+    demand_time_invariant = True           # fps never varies with t
 
     def __post_init__(self):
         self.data_per_request_mb = 0.6     # one grey-scale frame
@@ -283,24 +288,47 @@ class FleetBatch:
         self.groups = [(cls, np.asarray(idx, np.intp),
                         [self.fleet[i] for i in idx])
                        for cls, idx in groups.items()]
+        self._bound_rngs: list | None = None
+        self._rng_subs: list[list] = []
+        # per-group (G, 1) demand columns, cached the first time a class
+        # reports time-invariant demand (a width-1 column is constant by
+        # contract, so replaying it each chunk is bitwise identical)
+        self._const_demand: dict[int, np.ndarray] = {}
 
     def __len__(self) -> int:
         return len(self.fleet)
+
+    def bind_rngs(self, rngs: list) -> None:
+        """Pre-slice per-group RNG sublists for a stable fleet→Generator
+        mapping, so per-chunk calls skip the gather (the stepper rebinds
+        whenever fleet membership changes)."""
+        self._bound_rngs = rngs
+        self._rng_subs = [[rngs[i] for i in idx] for _, idx, _ in self.groups]
 
     def arrival_counts(self, rngs: list, t0: int, t1: int) -> np.ndarray:
         """(T, t1-t0) int64 per-second request counts, rows bitwise equal
         to each tenant's own ``arrival_counts`` draw."""
         out = np.empty((len(self.fleet), t1 - t0), np.int64)
-        for cls, idx, sub in self.groups:
-            out[idx] = cls.batch_arrival_counts(
-                sub, [rngs[i] for i in idx], t0, t1)
+        bound = rngs is self._bound_rngs
+        for g, (cls, idx, sub) in enumerate(self.groups):
+            sub_rngs = self._rng_subs[g] if bound else [rngs[i] for i in idx]
+            out[idx] = cls.batch_arrival_counts(sub, sub_rngs, t0, t1)
         return out
 
     def demand_rates(self, t0: int, t1: int) -> np.ndarray:
         """(T, t1-t0) float64 — or (T, 1) when every class in the fleet
         reports time-invariant demand."""
-        mats = [(idx, cls.batch_demand_rates(sub, t0, t1))
-                for cls, idx, sub in self.groups]
+        mats = []
+        for g, (cls, idx, sub) in enumerate(self.groups):
+            m = self._const_demand.get(g)
+            if m is None:
+                m = cls.batch_demand_rates(sub, t0, t1)
+                # a time-varying class also returns one column for a
+                # 1-second window, so invariance must be declared, never
+                # inferred from the shape
+                if m.shape[1] == 1 and cls.demand_time_invariant:
+                    self._const_demand[g] = m
+            mats.append((idx, m))
         width = t1 - t0 if any(m.shape[1] != 1 for _, m in mats) else 1
         out = np.empty((len(self.fleet), width), np.float64)
         for idx, m in mats:

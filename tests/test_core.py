@@ -77,7 +77,7 @@ def test_pool_invariants_under_random_ops(ops):
                 pool.release(t)
         except PoolError:
             pass
-        pool.check_invariants()
+        pool.check_invariants(deep=True)   # incl. the per-tenant units cache
         used_s = sum(pool.quota(x).slots for x in pool.tenants())
         assert used_s + pool.free.slots == 64
 
