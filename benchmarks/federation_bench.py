@@ -1,6 +1,7 @@
 """Federation benchmarks: engine trio speedup + multi-node policy sweep
 + fleet-scale (≥1M tenant-second) batched-engine sweep
-+ control-plane-bound tenants × round_interval sweep (``ctrlscale``).
++ control-plane-bound tenants × round_interval sweep (``ctrlscale``)
++ named-scenario walls (``scenarios``).
 
 ``engine_speedup`` measures all three execution engines on the paper's
 32-tenant / 1200 s scenario (identical seeded trace, so the comparison
@@ -10,16 +11,27 @@ federation across all five policies and reports per-node round overhead
 rates and placement churn. ``fleet_scale_sweep`` pushes 4-node
 federations to ≥1M tenant-seconds and records batched-vs-vectorized
 throughput; walls are min-of-``repeats`` because shared-host timing
-noise here swings single runs several-fold.
+noise here swings single runs several-fold. ``scenario_walls`` times
+every entry of the declarative scenario registry
+(:data:`repro.sim.scenario.SCENARIOS`), so scenario-level perf joins
+the fedscale/ctrlscale trajectory (BENCH_scenarios.json).
+
+Federation experiments are constructed through the declarative
+:class:`~repro.sim.scenario.Scenario` API; a default least-loaded spec
+compiles to exactly the hand-wired ``FederationConfig`` these benches
+used before, so the numbers stay comparable across the refactor.
 """
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
 
-from repro.sim import (SWEEP_POLICIES, EdgeFederation, EdgeNodeSim,
-                       FederationConfig, SimConfig, paper_capacity_units)
+from repro.sim import EdgeNodeSim, SimConfig, paper_capacity_units
+from repro.sim.federation import EdgeFederation
+from repro.sim.scenario import (SCENARIOS, FleetSpec, Scenario,
+                                TenantClassSpec, TopologySpec, run_scenario)
 from repro.sim.workload import (StreamWorkload, make_game_fleet,
                                 make_stream_fleet)
 
@@ -69,47 +81,42 @@ def engine_speedup(tenants: int = 32, duration: int = 1200,
 
 def federation_sweep(n_nodes: int = 4, tenants: int = 32,
                      duration: int = 1200, seed: int = 7) -> list[dict]:
-    rows = []
-    for policy in SWEEP_POLICIES:
-        rng = np.random.default_rng(42)
-        fleet = make_game_fleet(tenants, rng)
-        cfg = FederationConfig(
-            n_nodes=n_nodes, duration_s=duration, round_interval=300,
-            capacity_units=paper_capacity_units(tenants, n_nodes,
-                                                headroom=16),
-            policy=policy, seed=seed)
-        t0 = time.perf_counter()
-        res = EdgeFederation(fleet, cfg).run()
-        wall = time.perf_counter() - t0
-        overheads = res.mean_round_overhead_s
-        rows.append({
-            "policy": policy,
-            "n_nodes": n_nodes,
-            "tenants": tenants,
-            "violation_rate": res.violation_rate,
-            "per_node_vr": res.per_node_vr,
-            "per_node_round_overhead_s": overheads,
-            "max_round_overhead_s": max(overheads.values(), default=0.0),
-            "replaced": len(res.replaced),
-            "cloud": len(res.cloud),
-            "wall_s": wall,
-        })
-    return rows
+    sc = Scenario(
+        name="fed_sweep",
+        fleet=FleetSpec(classes=(TenantClassSpec("game", tenants),)),
+        topology=TopologySpec(n_nodes=n_nodes, headroom=16),
+        duration_s=duration, round_interval=300, seed=seed,
+        engine="vectorized")
+    res = run_scenario(sc)
+    return [{
+        "policy": policy,
+        "n_nodes": n_nodes,
+        "tenants": tenants,
+        "violation_rate": oc.violation_rate,
+        "per_node_vr": oc.per_node_vr,
+        "per_node_round_overhead_s": oc.mean_round_overhead_s,
+        "max_round_overhead_s": oc.max_round_overhead_s,
+        "replaced": oc.replaced,
+        "cloud": oc.cloud,
+        "wall_s": oc.wall_s,
+    } for policy, oc in res.outcomes.items()]
 
 
 # ---------------------------------------------------------------- fleet scale
 def _fleet_fed(workload: str, n_nodes: int, per_node: int, duration: int,
                round_interval: int, policy: str, engine: str,
                seed: int = 7) -> EdgeFederation:
-    tenants = n_nodes * per_node
-    rng = np.random.default_rng(42)
-    fleet = (make_stream_fleet(tenants, rng) if workload == "stream"
-             else make_game_fleet(tenants, rng))
-    cfg = FederationConfig(
-        n_nodes=n_nodes, duration_s=duration, round_interval=round_interval,
-        capacity_units=paper_capacity_units(tenants, n_nodes, headroom=16),
-        policy=policy, seed=seed, engine=engine)
-    return EdgeFederation(fleet, cfg)
+    kind = "stream" if workload == "stream" else "game"
+    sc = Scenario(
+        name=f"fleet_{workload}",
+        fleet=FleetSpec(classes=(
+            TenantClassSpec(kind, n_nodes * per_node),)),
+        topology=TopologySpec(n_nodes=n_nodes, headroom=16),
+        duration_s=duration, round_interval=round_interval, seed=seed,
+        engine=engine)
+    # built here, timed by the caller: construction (placement draws)
+    # stays outside the measured run() wall, as it always has
+    return EdgeFederation(sc.fleet.build(), sc.federation_config(policy))
 
 
 def _federation_results_identical(a, b) -> bool:
@@ -271,4 +278,44 @@ def control_plane_scale(quick: bool = False, repeats: int = 5) -> list[dict]:
             raise AssertionError(
                 f"control-plane divergence on {row}: array != reference")
         rows.append(row)
+    return rows
+
+
+# ------------------------------------------------------------- scenarios
+def scenario_walls(quick: bool = False, repeats: int = 3) -> list[dict]:
+    """``scenarios``: min-of-``repeats`` wall clock for every named
+    scenario in the declarative registry (primary policy only), so
+    scenario-level performance joins the fedscale/ctrlscale trajectory.
+    Walls include EdgeFederation construction — placement is part of
+    what a scenario runs. Raises on any non-finite violation rate, so
+    a broken registry entry fails the build instead of persisting NaN.
+    """
+    if quick:
+        repeats = 1
+    rows = []
+    for name, sc in SCENARIOS.items():
+        walls, res = [], None
+        for _ in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            res = run_scenario(sc, policies=("sdps",), quick=quick)
+            walls.append(time.perf_counter() - t0)
+        oc = res.outcomes["sdps"]
+        if not math.isfinite(oc.violation_rate):
+            raise AssertionError(
+                f"scenario {name}: non-finite VR {oc.violation_rate}")
+        run_sc = res.scenario           # the quick() variant when quick
+        rows.append({
+            "scenario": name,
+            "policy": "sdps",
+            "n_nodes": run_sc.topology.n_nodes,
+            "tenants": run_sc.fleet.size,
+            "duration_s": run_sc.duration_s,
+            "tenant_seconds": run_sc.fleet.size * run_sc.duration_s,
+            "placement": run_sc.placement,
+            "violation_rate": oc.violation_rate,
+            "replaced": oc.replaced,
+            "cloud": oc.cloud,
+            "max_round_overhead_s": oc.max_round_overhead_s,
+            "wall_s": min(walls),
+        })
     return rows

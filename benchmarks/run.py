@@ -192,6 +192,20 @@ def main() -> None:
                 f"bitwise={r['bitwise_identical']})")
         _persist_section("ctrlscale", rows, args.quick)
 
+    if want("scenarios"):
+        from benchmarks import federation_bench
+        rows = federation_bench.scenario_walls(quick=args.quick)
+        results["scenarios"] = rows
+        for r in rows:
+            _csv(
+                f"scenarios/{r['scenario']}",
+                r["wall_s"] * 1e6,
+                f"{r['tenants']}t×{r['n_nodes']}n/{r['duration_s']}s "
+                f"{r['placement']}: VR={r['violation_rate'] * 100:.1f}% "
+                f"replaced={r['replaced']} cloud={r['cloud']} "
+                f"max-ovh={r['max_round_overhead_s'] * 1e3:.2f}ms")
+        _persist_section("scenarios", rows, args.quick)
+
     if want("roofline"):
         from benchmarks.roofline_report import roofline_table
         rows = roofline_table()

@@ -1,74 +1,80 @@
-"""Federation demo: 4 Edge nodes × 32 tenants, all five scaling policies.
+"""Federation demo: run any named scenario from the registry.
 
-  PYTHONPATH=src python examples/federation_demo.py [--nodes 4]
-  [--tenants 32] [--duration 1200]
+  PYTHONPATH=src python examples/federation_demo.py [--scenario NAME]
+  [--nodes N] [--tenants N] [--duration S] [--seed S] [--engine E]
+  [--placement P] [--quick] [--list-scenarios]
 
-Each node runs the paper's DyverseController (Procedures 1–3); the
-federation tier places tenants on the least-loaded node, re-places
-Procedure-3 evictees onto siblings, and falls back to the Cloud (WAN
-latency) as a last resort. Prints the per-node mean round overhead —
-the paper's sub-second-per-round claim (Fig. 2) — and a
-policy-vs-violation-rate table (Figs. 4/5, federated)."""
+The default scenario is ``paper_game_32`` — 4 Edge nodes × 32 iPokeMon
+tenants, all five scaling policies, exactly the hand-wired setup this
+demo used to construct itself. Each node runs the paper's
+DyverseController (Procedures 1–3); the federation tier places tenants
+under the scenario's PlacementPolicy, re-places Procedure-3 evictees
+onto siblings, and falls back to the Cloud (WAN latency) as a last
+resort. Prints the ScenarioResult table: per-policy federation/node
+violation rates (Figs. 4/5), latency/SLO bands (Figs. 6/7), placement
+churn, and the per-node mean round overhead — the paper's
+sub-second-per-round claim (Fig. 2).
+"""
 import argparse
-import time
+import dataclasses
 
-import numpy as np
+from repro.sim.scenario import SCENARIOS, format_registry, run_scenario
 
-from repro.sim import (SWEEP_POLICIES, EdgeFederation, FederationConfig,
-                       paper_capacity_units)
-from repro.sim.workload import make_game_fleet
+
+def _apply_overrides(sc, args):
+    """CLI knobs override the named scenario's spec (only where given)."""
+    if args.nodes is not None:
+        sc = dataclasses.replace(
+            sc, topology=dataclasses.replace(sc.topology, n_nodes=args.nodes))
+    if args.tenants is not None:
+        classes = sc.fleet.classes
+        if len(classes) != 1:
+            raise SystemExit("--tenants only applies to single-class "
+                             f"scenarios; {sc.name!r} has {len(classes)}")
+        sc = dataclasses.replace(sc, fleet=dataclasses.replace(
+            sc.fleet,
+            classes=(dataclasses.replace(classes[0], count=args.tenants),)))
+    if args.duration is not None:
+        sc = dataclasses.replace(
+            sc, duration_s=args.duration,
+            round_interval=min(sc.round_interval, args.duration))
+    if args.seed is not None:
+        sc = dataclasses.replace(sc, seed=args.seed)
+    if args.engine is not None:
+        sc = dataclasses.replace(sc, engine=args.engine)
+    if args.placement is not None:
+        sc = dataclasses.replace(sc, placement=args.placement)
+    return sc
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--nodes", type=int, default=4)
-    ap.add_argument("--tenants", type=int, default=32)
-    ap.add_argument("--duration", type=int, default=1200)
-    ap.add_argument("--seed", type=int, default=7)
-    ap.add_argument("--engine", default="batched",
+    ap.add_argument("--scenario", default="paper_game_32",
+                    choices=sorted(SCENARIOS),
+                    help="named scenario from the registry")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="list registry entries and exit")
+    ap.add_argument("--nodes", type=int, default=None)
+    ap.add_argument("--tenants", type=int, default=None)
+    ap.add_argument("--duration", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--engine", default=None,
                     choices=["scalar", "vectorized", "batched"],
                     help="execution engine (all three are bitwise "
                          "identical; batched steps the whole federation "
                          "as one matrix per chunk)")
+    ap.add_argument("--placement", default=None,
+                    choices=["least_loaded", "locality", "price_aware"])
+    ap.add_argument("--quick", action="store_true",
+                    help="short-duration smoke variant")
     args = ap.parse_args()
 
-    per_node_cap = paper_capacity_units(args.tenants, args.nodes,
-                                        headroom=16)
-    print(f"federation: {args.nodes} nodes × cap {per_node_cap}u, "
-          f"{args.tenants} tenants, {args.duration}s session, "
-          f"{args.engine} engine\n")
+    if args.list_scenarios:
+        print(format_registry())
+        return
 
-    rows = []
-    for policy in SWEEP_POLICIES:
-        fleet = make_game_fleet(args.tenants, np.random.default_rng(42))
-        cfg = FederationConfig(
-            n_nodes=args.nodes, duration_s=args.duration,
-            round_interval=300, capacity_units=per_node_cap,
-            policy=policy, seed=args.seed, engine=args.engine)
-        t0 = time.perf_counter()
-        res = EdgeFederation(fleet, cfg).run()
-        wall = time.perf_counter() - t0
-        rows.append((policy, res, wall))
-
-        over = res.mean_round_overhead_s
-        if policy != "none":
-            worst = max(over.values())
-            ok = "ok (paper: sub-second)" if worst < 1.0 else "VIOLATED"
-            print(f"[{policy}] per-node mean round overhead: "
-                  + "  ".join(f"{n}={s * 1e3:.2f}ms"
-                              for n, s in sorted(over.items()))
-                  + f"  → max {worst * 1e3:.2f}ms {ok}")
-
-    print("\npolicy   fed-VR%   " +
-          "  ".join(f"{f'edge{i}':>7}" for i in range(args.nodes)) +
-          "   replaced  cloud   wall")
-    for policy, res, wall in rows:
-        per_node = [res.per_node_vr.get(f"edge{i}", 0.0)
-                    for i in range(args.nodes)]
-        print(f"{policy:<8} {res.violation_rate * 100:6.1f}   "
-              + "  ".join(f"{v * 100:6.1f}%" for v in per_node)
-              + f"   {len(res.replaced):8d}  {len(res.cloud):5d} "
-              f"{wall:6.2f}s")
+    sc = _apply_overrides(SCENARIOS[args.scenario], args)
+    print(run_scenario(sc, quick=args.quick).table())
 
 
 if __name__ == "__main__":

@@ -625,6 +625,26 @@ class DyverseController:
         report.terminated.append(name)
         report.actions.append(RoundAction(name, Decision.TERMINATE))
 
+    def release_tenant(self, name: str) -> TenantState:
+        """Federation hook: detach a tenant WITHOUT Procedure 3's penalty
+        accounting — used when the hosting *node* disappears (fault
+        injection, node failure mid-session) rather than the tenant being
+        evicted for cause. Frees the quota and the monitor slot (the
+        cumulative Eq. 1 totals are kept — requests already served still
+        count), but does not bump the tenant's Age_s and does not invoke
+        the actuator's terminate path (there is no node left to migrate
+        state from). Returns the final TenantState so the federation can
+        carry the spec and counters to the tenant's next home."""
+        st = self.registry.pop(name, None)
+        if st is None:
+            raise KeyError(f"tenant {name!r} not hosted here")
+        self.pool.release(name)
+        self._members_epoch += 1
+        if isinstance(st, _SlotState):
+            st._detach()                 # before the slot is freed
+        self.monitor.forget(name)
+        return st
+
     # ------------------------------------------------------------ views
     @property
     def node_violation_rate(self) -> float:

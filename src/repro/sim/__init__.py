@@ -4,6 +4,13 @@ from repro.sim.workload import (FleetBatch, GameWorkload,  # noqa: F401
 from repro.sim.edgesim import (ENGINES, EdgeNodeSim,  # noqa: F401
                                FleetStepper, SimConfig, SimResult,
                                tenant_stream)
-from repro.sim.federation import (SWEEP_POLICIES, EdgeFederation,  # noqa: F401
-                                  FederationConfig, FederationResult,
-                                  PlacementEvent, paper_capacity_units)
+from repro.sim.federation import (PLACEMENTS, SWEEP_POLICIES,  # noqa: F401
+                                  EdgeFederation, FederationConfig,
+                                  FederationResult, PlacementEvent,
+                                  PlacementPolicy, paper_capacity_units,
+                                  resolve_placement)
+from repro.sim.scenario import (SCENARIOS, FaultSpec, FleetSpec,  # noqa: F401
+                                NodeFailure, PolicyOutcome, Scenario,
+                                ScenarioResult, TenantClassSpec,
+                                TopologySpec, register_scenario,
+                                run_scenario)

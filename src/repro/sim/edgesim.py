@@ -84,6 +84,10 @@ class SimConfig:
     #                                   scale (fast, NOT bitwise-guaranteed)
     control_plane: str = "array"      # "array" | "reference" controller path
     rng_workers: int = 2              # batched engine: jitter-draw pool size
+    # this node's Cloud link: Cloud-serviced requests pay this round-trip
+    # (per-node WAN heterogeneity — TopologySpec threads it through here)
+    wan_extra_latency: float = WAN_EXTRA_LATENCY
+    unit_price: float = 1.0           # per-uR price (price-aware placement)
     seed: int = 0
 
 
@@ -99,6 +103,9 @@ class SimResult:
     overhead_priority_s: list[float] = field(default_factory=list)
     overhead_scaling_s: list[float] = field(default_factory=list)
     terminated: list[str] = field(default_factory=list)
+    # per-round Procedure-1 action streams (RoundReport.actions), in round
+    # order — the scenario/placement equivalence tests pin these bitwise
+    round_actions: list[list] = field(default_factory=list)
     migration_s: list[float] = field(default_factory=list)
     total_requests: int = 0                     # Edge-serviced (Eq. 1 basis)
     total_violations: int = 0
@@ -276,7 +283,7 @@ class EdgeNodeSim:
         penalty but, as in the paper, don't enter Edge SLO accounting)."""
         if name in self.evicted:
             if lat.size:
-                self._all_lat.append(lat + WAN_EXTRA_LATENCY)
+                self._all_lat.append(lat + self.cfg.wan_extra_latency)
                 self._all_slo.append(np.full(lat.size, slo))
             return
         self.ctrl.monitor.record_batch(
@@ -341,6 +348,7 @@ class EdgeNodeSim:
         self._result.overhead_priority_s.append(report.priority_update_s)
         self._result.overhead_scaling_s.append(report.scaling_s)
         self._result.terminated.extend(report.terminated)
+        self._result.round_actions.append(report.actions)
         return report
 
     def finalize(self) -> SimResult:
@@ -479,6 +487,8 @@ class FleetStepper:
         # (same python products the other engines compute per chunk)
         self._slos = np.array([node.cfg.slo_scale * wl.base_latency
                                for node, _, wl in entries], np.float64)
+        # per-row Cloud round-trip penalty (the hosting node's WAN link)
+        self._wan = [node.cfg.wan_extra_latency for node, _, _ in entries]
         self._data_mb = [wl.data_per_request_mb for _, _, wl in entries]
         self._data_mb_arr = np.asarray(self._data_mb, np.float64)
         # array-control-plane nodes take the O(1)-per-chunk add_chunk
@@ -607,9 +617,10 @@ class FleetStepper:
             viol_ts = np.zeros((T, S), np.int64)
         viol_t = viol_ts.sum(axis=1)
         # Cloud-serviced tenants: WAN penalty on the user-visible
-        # latencies (same elementwise add the other engines apply)
+        # latencies (same elementwise add the other engines apply, with
+        # the hosting node's own Cloud-link latency)
         for i in np.flatnonzero(evicted):
-            lat[starts[i]:starts[i + 1]] += WAN_EXTRA_LATENCY
+            lat[starts[i]:starts[i + 1]] += self._wan[i]
         # per-node per-second tallies over Edge-hosted rows only
         # (integer sums — order-independent, exact)
         live = ~evicted

@@ -8,11 +8,18 @@ tier plays the role the *Cloud Manager* plays at deployment time, for a
 whole fleet of nodes:
 
 * **Placement** — when a tenant is offloaded, the federation admits it
-  to the least-loaded node (smallest projected allocated-units
-  fraction, via ``DyverseController.load_fraction_after``) among those
-  with free capacity for the default quota (``can_admit``). This is the
+  to the best-ranked node under a pluggable :class:`PlacementPolicy`
+  among those with free capacity for the default quota (``can_admit``).
+  The default ``least_loaded`` policy picks the smallest projected
+  allocated-units fraction (via ``DyverseController.
+  load_fraction_after``); ``locality`` prefers the cheapest node↔Cloud
+  WAN link and ``price_aware`` the lowest per-uR price. This is the
   "which Edge node hosts the server" decision the paper defers to the
   Cloud Manager.
+* **Faults** — ``FederationConfig.node_failures`` schedules whole-node
+  failures: at the first chunk boundary ≥ the scheduled second, every
+  tenant the node hosts re-places on the surviving siblings (or the
+  Cloud tier), keeping its spec, RNG streams, Age_s and Loyalty_s.
 * **Re-placement** — when a node's Procedure 3 terminates a tenant
   (eviction under contention), the federation first tries to migrate it
   to a sibling Edge node with spare capacity, and only falls back to
@@ -32,16 +39,92 @@ request-weighted mean of the per-node violation rates.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
 
 import numpy as np
 
 from repro.core import POLICIES, PricingModel, TenantSpec
-from repro.sim.edgesim import (EdgeNodeSim, FleetStepper, SimConfig,
-                               SimResult, tenant_stream)
+from repro.sim.edgesim import (WAN_EXTRA_LATENCY, EdgeNodeSim, FleetStepper,
+                               SimConfig, SimResult, tenant_stream)
 from repro.sim.workload import Workload
 
 # the no-scaling baseline + the four priority policies (Figs. 3–5 sweeps)
 SWEEP_POLICIES = ("none",) + POLICIES
+
+
+# ------------------------------------------------------- placement policies
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    """Which feasible node hosts a tenant (admission AND eviction
+    re-placement). The federation filters candidates to nodes with free
+    capacity (``can_admit``), then sorts them by ``key`` ascending and
+    picks the first — so a policy is just a total order over nodes.
+    Keys must end with a deterministic tie-break (the node name) so
+    placement never depends on Python sort stability across runs."""
+
+    name: str
+
+    def key(self, node: EdgeNodeSim, wl: Workload) -> tuple: ...
+
+
+class LeastLoadedPlacement:
+    """The paper-default policy (extracted verbatim from the previously
+    hardwired ``EdgeFederation._place`` sort): smallest projected
+    allocated-units fraction after admission, ties by node name. On
+    heterogeneous fleets this steers tenants toward the node that ends
+    up least utilised."""
+
+    name = "least_loaded"
+
+    def key(self, node: EdgeNodeSim, wl: Workload) -> tuple:
+        return (node.ctrl.load_fraction_after(), node.name)
+
+
+class LocalityPlacement:
+    """Network-locality-aware: prefer the node with the cheapest
+    node↔Cloud WAN link (``SimConfig.wan_extra_latency``), so tenants
+    land where an eventual Cloud fallback — and the origin round-trip
+    their users already pay — is cheapest. Ties fall back to the
+    least-loaded order."""
+
+    name = "locality"
+
+    def key(self, node: EdgeNodeSim, wl: Workload) -> tuple:
+        return (node.cfg.wan_extra_latency, node.ctrl.load_fraction_after(),
+                node.name)
+
+
+class PriceAwarePlacement:
+    """Price-aware: prefer the node with the lowest per-uR unit price
+    (``SimConfig.unit_price`` — heterogeneous fleets mix expensive big
+    boxes with EdgeOS-style dense cheap nodes). Ties fall back to the
+    least-loaded order."""
+
+    name = "price_aware"
+
+    def key(self, node: EdgeNodeSim, wl: Workload) -> tuple:
+        return (node.cfg.unit_price, node.ctrl.load_fraction_after(),
+                node.name)
+
+
+PLACEMENTS: dict[str, PlacementPolicy] = {
+    p.name: p for p in (LeastLoadedPlacement(), LocalityPlacement(),
+                        PriceAwarePlacement())
+}
+
+
+def resolve_placement(policy: str | PlacementPolicy) -> PlacementPolicy:
+    """Registry lookup for string names; pass-through for policy objects
+    (anything exposing ``name`` + ``key``)."""
+    if isinstance(policy, str):
+        try:
+            return PLACEMENTS[policy]
+        except KeyError:
+            raise ValueError(
+                f"placement {policy!r} not in {sorted(PLACEMENTS)}") from None
+    if not isinstance(policy, PlacementPolicy):
+        raise TypeError(f"not a PlacementPolicy: {policy!r}")
+    return policy
 
 
 def paper_capacity_units(tenants: int, n_nodes: int = 1,
@@ -68,14 +151,32 @@ class FederationConfig:
     engine: str = "vectorized"
     control_plane: str = "array"       # "array" | "reference" (per node)
     rng_workers: int = 2               # batched engine: jitter-draw pool
+    placement: str | PlacementPolicy = "least_loaded"
+    # per-node node↔Cloud WAN round-trip (heterogeneous links); None →
+    # the homogeneous WAN_EXTRA_LATENCY default on every node
+    node_wan_latency_s: list[float] | None = None
+    node_unit_price: list[float] | None = None   # price-aware placement
+    # scheduled whole-node failures: (second, node name); each fires at
+    # the first chunk boundary ≥ its second and re-places every tenant
+    # the node hosts on the surviving siblings (or the Cloud tier)
+    node_failures: list[tuple[int, str]] = field(default_factory=list)
     seed: int = 0
 
+    def _per_node(self, values, i: int, default):
+        if values is None:
+            return default
+        if len(values) != self.n_nodes:
+            raise ValueError(
+                f"per-node list of length {len(values)} for "
+                f"{self.n_nodes} nodes")
+        return values[i]
+
     def node_sim_config(self, i: int) -> SimConfig:
-        caps = self.node_capacities
         return SimConfig(
             duration_s=self.duration_s,
             round_interval=self.round_interval,
-            capacity_units=caps[i] if caps else self.capacity_units,
+            capacity_units=self._per_node(self.node_capacities, i,
+                                          self.capacity_units),
             default_units=self.default_units,
             policy=self.policy,
             slo_scale=self.slo_scale,
@@ -85,6 +186,9 @@ class FederationConfig:
             engine=self.engine,
             control_plane=self.control_plane,
             rng_workers=self.rng_workers,
+            wan_extra_latency=self._per_node(self.node_wan_latency_s, i,
+                                             WAN_EXTRA_LATENCY),
+            unit_price=self._per_node(self.node_unit_price, i, 1.0),
             seed=self.seed,
         )
 
@@ -94,8 +198,8 @@ class PlacementEvent:
     t: int                      # simulated second of the decision
     tenant: str
     node: str | None            # None → Cloud tier
-    kind: str                   # "admit" | "replace" | "cloud"
-    source: str | None = None   # node the tenant was evicted from
+    kind: str                   # "admit" | "replace" | "failover" | "cloud"
+    source: str | None = None   # node the tenant was evicted/failed from
 
 
 @dataclass
@@ -108,6 +212,7 @@ class FederationResult:
     placements: list[PlacementEvent] = field(default_factory=list)
     replaced: list[str] = field(default_factory=list)   # moved node→node
     cloud: list[str] = field(default_factory=list)      # ended on the Cloud
+    failed_nodes: list[str] = field(default_factory=list)   # FaultSpec hits
 
     @property
     def per_node_vr(self) -> dict[str, float]:
@@ -122,12 +227,35 @@ class FederationResult:
 class EdgeFederation:
     def __init__(self, workloads: list[Workload], cfg: FederationConfig):
         self.cfg = cfg
+        self.placement = resolve_placement(cfg.placement)
         self.nodes = [
             EdgeNodeSim([], cfg.node_sim_config(i), name=f"edge{i}")
             for i in range(cfg.n_nodes)
         ]
         self.placements: list[PlacementEvent] = []
         self.replaced: list[str] = []
+        self.failed: set[str] = set()
+        node_names = {n.name for n in self.nodes}
+        for ft, fname in cfg.node_failures:
+            if fname not in node_names:
+                raise ValueError(f"node_failures names unknown node "
+                                 f"{fname!r} (have {sorted(node_names)})")
+            if not 0 < ft:
+                raise ValueError(f"node failure at t={ft} must be > 0")
+            # boundaries are the multiples of round_interval (plus the
+            # run end, where firing would be unobservable): a failure
+            # whose first boundary is not inside the run never fires —
+            # reject it instead of silently dropping it
+            boundary = -(-ft // cfg.round_interval) * cfg.round_interval
+            if boundary >= cfg.duration_s:
+                raise ValueError(
+                    f"node failure at t={ft} would never fire: its chunk "
+                    f"boundary {boundary} is not before "
+                    f"duration_s={cfg.duration_s}")
+        if len({f[1] for f in cfg.node_failures}) >= cfg.n_nodes:
+            raise ValueError("node_failures would kill every node")
+        # schedule sorted by time; each fires at the first boundary ≥ t
+        self._pending_failures = sorted(cfg.node_failures)
         names = [wl.name for wl in workloads]
         if len(set(names)) != len(names):
             raise ValueError("duplicate tenant names in federation fleet")
@@ -140,22 +268,34 @@ class EdgeFederation:
             self._place(wl, donation=donation, premium=premium, t=0)
 
     # ---------------------------------------------------------- placement
-    def _feasible_nodes(self, exclude: EdgeNodeSim | None = None):
+    def _feasible_nodes(self, wl: Workload,
+                        exclude: EdgeNodeSim | None = None):
         cands = [n for n in self.nodes
-                 if n is not exclude and n.ctrl.can_admit()]
-        return sorted(cands,
-                      key=lambda n: (n.ctrl.load_fraction_after(), n.name))
+                 if n is not exclude and n.name not in self.failed
+                 and n.ctrl.can_admit()]
+        return sorted(cands, key=lambda n: self.placement.key(n, wl))
+
+    def _live_host(self, preferred: EdgeNodeSim | None) -> EdgeNodeSim:
+        """A surviving node to account a Cloud-tier tenant on."""
+        if preferred is not None and preferred.name not in self.failed:
+            return preferred
+        for n in self.nodes:
+            if n.name not in self.failed:
+                return n
+        raise RuntimeError("no live node left to host the Cloud tier")
 
     def _place(self, wl: Workload, *, donation: bool, premium: float,
                t: int, spec: TenantSpec | None = None, tenant_rng=None,
                source: str | None = None, prior_age: int = 0,
-               prior_loyalty: int = 0) -> EdgeNodeSim | None:
-        kind = "admit" if source is None else "replace"
+               prior_loyalty: int = 0,
+               kind: str | None = None) -> EdgeNodeSim | None:
+        if kind is None:
+            kind = "admit" if source is None else "replace"
         # a tenant Procedure 3 just evicted must go to a SIBLING node —
         # the source freed its units, so it would otherwise re-admit the
         # tenant it terminated and churn
         src_node = next((n for n in self.nodes if n.name == source), None)
-        feasible = self._feasible_nodes(exclude=src_node)
+        feasible = self._feasible_nodes(wl, exclude=src_node)
         if feasible:
             node = feasible[0]
             if prior_age:
@@ -179,9 +319,10 @@ class EdgeFederation:
             if source is not None:
                 self.replaced.append(wl.name)
             return node
-        # Cloud tier: host on the source node (or node 0) as an evicted
-        # tenant — requests keep flowing with WAN latency
-        host = src_node or self.nodes[0]
+        # Cloud tier: host on the source node (or the first live node,
+        # when the source itself failed) as an evicted tenant — requests
+        # keep flowing with that node's WAN latency
+        host = self._live_host(src_node or self.nodes[0])
         host.host_cloud_tenant(wl, tenant_rng=tenant_rng)
         self.placements.append(PlacementEvent(
             t=t, tenant=wl.name, node=None, kind="cloud", source=source))
@@ -207,6 +348,52 @@ class EdgeFederation:
                         tenant_rng=rng, source=node.name, prior_age=age,
                         prior_loyalty=loyalty)
 
+    # ---------------------------------------------------------- faults
+    def _fail_node(self, node: EdgeNodeSim, t: int) -> None:
+        """Mid-session whole-node failure (``FederationConfig.
+        node_failures``): the node stops serving and every tenant it
+        hosts — Edge-managed and Cloud-fallback alike — re-places on the
+        surviving siblings, or falls back to the Cloud tier hosted on a
+        live node. Unlike a Procedure-3 eviction, a failure is the
+        infrastructure's fault: refugees keep their original spec
+        (donation/premium intact) and are NOT charged Age_s
+        (``DyverseController.release_tenant``). The dead node's
+        already-served requests still count in Eq. 1."""
+        self.failed.add(node.name)
+        refugees = []
+        for name in list(node.workloads):
+            age = node.ctrl.prior_age(name)
+            loyalty = node.ctrl.prior_loyalty(name)
+            st = (node.ctrl.release_tenant(name)
+                  if name in node.ctrl.registry else None)
+            rng = node.tenant_rngs[name]
+            wl = node.remove_tenant(name)
+            refugees.append((wl, rng, st, age, loyalty))
+        for wl, rng, st, age, loyalty in refugees:
+            if st is not None:
+                spec, donation, premium = (st.spec, st.spec.donation,
+                                           st.spec.premium)
+            else:   # was already Cloud-serviced: same refugee contract
+                #     an eviction re-placement would carry
+                spec = TenantSpec(
+                    name=wl.name,
+                    slo_latency=node.cfg.slo_scale * wl.base_latency,
+                    users=wl.users(), donation=False,
+                    pricing=node.cfg.pricing, premium=0.0)
+                donation, premium = False, 0.0
+            self._place(wl, donation=donation, premium=premium, t=t,
+                        spec=spec, tenant_rng=rng, source=node.name,
+                        prior_age=age, prior_loyalty=loyalty,
+                        kind="failover")
+
+    def _apply_failures(self, t1: int) -> None:
+        while self._pending_failures and self._pending_failures[0][0] <= t1:
+            _, fname = self._pending_failures.pop(0)
+            if fname in self.failed:
+                continue            # duplicate schedule entry: already dead
+            node = next(n for n in self.nodes if n.name == fname)
+            self._fail_node(node, t1)
+
     # ---------------------------------------------------------- execution
     def run(self) -> FederationResult:
         cfg = self.cfg
@@ -222,7 +409,8 @@ class EdgeFederation:
                 stepper.step(t, t1)
             else:
                 for node in self.nodes:
-                    node.step_chunk(t, t1)
+                    if node.name not in self.failed:
+                        node.step_chunk(t, t1)
             if cfg.policy != "none" and t1 % cfg.round_interval == 0 \
                     and t1 < cfg.duration_s:
                 # all Procedure-1 rounds first, re-placement after: a
@@ -231,9 +419,12 @@ class EdgeFederation:
                 # down / evictable with zero requests on the books, and
                 # outcomes would depend on node iteration order)
                 reports = [(n, n.run_controller_round())
-                           for n in self.nodes]
+                           for n in self.nodes if n.name not in self.failed]
                 for node, report in reports:
                     self._replace_terminated(node, report.terminated, t1)
+            # faults fire at the boundary, after the rounds: the failing
+            # node's last chunk is fully accounted before its tenants move
+            self._apply_failures(t1)
             t = t1
         return self._finalize()
 
@@ -251,4 +442,5 @@ class EdgeFederation:
             placements=self.placements,
             replaced=self.replaced,
             cloud=cloud,
+            failed_nodes=sorted(self.failed),
         )

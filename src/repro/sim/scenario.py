@@ -1,0 +1,522 @@
+"""Declarative scenario API: typed experiment specs over the federation.
+
+The paper's claims are scenario comparisons — policy × workload × fleet
+size (Figs. 4–6) — and every interesting extension (mixed fleets, node
+failures, WAN/capacity heterogeneity, placement policies) is another
+scenario axis. This module makes the experiment surface declarative:
+a :class:`Scenario` is a frozen, typed description of *what* to run,
+and :func:`run_scenario` is the single compiler/runner that lowers it
+onto the existing :class:`~repro.sim.federation.EdgeFederation`
+machinery and returns a uniform :class:`ScenarioResult`.
+
+Schema
+======
+
+``Scenario``
+    ``name``            registry key / report label.
+    ``fleet``           a :class:`FleetSpec`: per-class tenant mixes
+                        (``TenantClassSpec(kind, count, seed, ...)`` with
+                        kind ``"game"`` (iPokeMon-like) or ``"stream"``
+                        (Face-Detection-like)) plus optional explicit
+                        :class:`~repro.sim.workload.Workload` instances.
+    ``topology``        a :class:`TopologySpec`: node count, per-node
+                        capacity units (homogeneous ``capacity_units``,
+                        heterogeneous ``node_capacities``, or the paper
+                        default scaled from the fleet size + headroom),
+                        per-node node↔Cloud WAN latency and per-uR price.
+    ``faults``          a :class:`FaultSpec`: scheduled whole-node
+                        failures (the node's tenants re-place on the
+                        surviving siblings or fall back to the Cloud).
+    ``placement``       a :class:`~repro.sim.federation.PlacementPolicy`
+                        name — ``least_loaded`` | ``locality`` |
+                        ``price_aware``.
+    ``policies``        the scaling policies swept per run (default: the
+                        ``none`` baseline + the four priority policies).
+    plus the engine / control-plane / cadence / pricing / seed knobs that
+    previously had to be hand-wired into ``FederationConfig`` tuples.
+
+Runnable example
+================
+
+>>> from repro.sim.scenario import (FleetSpec, Scenario, TenantClassSpec,
+...                                 TopologySpec, run_scenario)
+>>> sc = Scenario(
+...     name="tiny_mixed",
+...     fleet=FleetSpec(classes=(TenantClassSpec("game", 4),
+...                              TenantClassSpec("stream", 4))),
+...     topology=TopologySpec(n_nodes=2, capacity_units=96),
+...     duration_s=240, round_interval=120, policies=("none", "sdps"))
+>>> res = run_scenario(sc)
+>>> sorted(res.outcomes) == ["none", "sdps"]
+True
+>>> 0.0 <= res.outcomes["sdps"].violation_rate <= 1.0
+True
+
+Named paper scenarios live in the :data:`SCENARIOS` registry
+(``paper_game_32``, ``paper_face_detection``, ``mixed_fleet``,
+``hetero_one_big_many_small``, ``node_failure_midrun``) and can be run
+from the command line — the CI smoke runs every entry::
+
+    PYTHONPATH=src python -m repro.sim.scenario --quick
+
+Equivalence contract: a default least-loaded/homogeneous ``Scenario``
+compiles to exactly the ``FederationConfig`` + ``make_*_fleet`` calls
+the benchmarks and demo used to hand-wire, so ``run_scenario`` is
+bitwise-identical to the pre-scenario construction path (pinned by
+``tests/test_scenario.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import sys
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import PricingModel
+from repro.sim.edgesim import ENGINES, WAN_EXTRA_LATENCY
+from repro.sim.federation import (PLACEMENTS, SWEEP_POLICIES, EdgeFederation,
+                                  FederationConfig, FederationResult,
+                                  PlacementEvent, paper_capacity_units)
+from repro.sim.workload import (Workload, make_game_fleet, make_stream_fleet)
+
+# tenant-class kinds → (builder, default name prefix)
+_FLEET_BUILDERS = {
+    "game": (make_game_fleet, "game"),
+    "stream": (make_stream_fleet, "fd"),
+}
+
+# latency bands relative to the SLO (Figs. 6/7): under the dThr=0.8
+# scale-down threshold, the (0.8, 1]·SLO donation band, and violating
+BANDS = (("[0.00,0.80)", 0.0, 0.8), ("[0.80,1.00)", 0.8, 1.0),
+         ("[1.00,inf)", 1.0, math.inf))
+
+
+# ------------------------------------------------------------------- specs
+@dataclass(frozen=True)
+class TenantClassSpec:
+    """One homogeneous slice of the fleet: ``count`` tenants of ``kind``
+    with class parameters drawn from ``seed`` (exactly the
+    ``make_*_fleet(count, default_rng(seed))`` draw the hand-wired
+    experiments perform). ``prefix`` namespaces tenant names so several
+    classes of the same kind can coexist in one fleet."""
+
+    kind: str                          # "game" | "stream"
+    count: int
+    seed: int = 42
+    base_latency: float | None = None  # None → the class's paper default
+    prefix: str | None = None          # None → "game" / "fd"
+
+    def build(self) -> list[Workload]:
+        if self.kind not in _FLEET_BUILDERS:
+            raise ValueError(f"tenant class kind {self.kind!r} not in "
+                             f"{sorted(_FLEET_BUILDERS)}")
+        if self.count <= 0:
+            raise ValueError(f"tenant class count must be > 0")
+        builder, default_prefix = _FLEET_BUILDERS[self.kind]
+        rng = np.random.default_rng(self.seed)
+        kw = {"prefix": self.prefix or default_prefix}
+        if self.base_latency is not None:
+            kw["base_latency"] = self.base_latency
+        return builder(self.count, rng, **kw)
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """The tenant mix: class slices plus optional explicit Workloads
+    (tests and one-off experiments can pin exact tenants)."""
+
+    classes: tuple[TenantClassSpec, ...] = ()
+    workloads: tuple[Workload, ...] = ()
+
+    @property
+    def size(self) -> int:
+        return sum(c.count for c in self.classes) + len(self.workloads)
+
+    def build(self) -> list[Workload]:
+        """Fresh Workload instances, class order then explicit order —
+        rebuilt per run so no simulator state leaks between policies."""
+        fleet: list[Workload] = []
+        for c in self.classes:
+            fleet.extend(c.build())
+        # explicit workloads are stateless during a run, but copy anyway
+        # so two runs of the same Scenario can never alias
+        fleet.extend(dataclasses.replace(w) for w in self.workloads)
+        return fleet
+
+
+@dataclass(frozen=True)
+class TopologySpec:
+    """The node fleet: capacities and per-node Cloud-link properties.
+
+    Capacity resolution order: ``node_capacities`` (heterogeneous) else
+    ``capacity_units`` (homogeneous) else the paper's §5 capacity scaled
+    to the tenant count and split across nodes plus ``headroom``
+    (:func:`~repro.sim.federation.paper_capacity_units`)."""
+
+    n_nodes: int = 4
+    capacity_units: int | None = None
+    node_capacities: tuple[int, ...] | None = None
+    headroom: int = 16
+    # node↔Cloud WAN round-trip: one float (homogeneous) or per-node
+    wan_latency_s: float | tuple[float, ...] = WAN_EXTRA_LATENCY
+    unit_price: float | tuple[float, ...] = 1.0
+
+    def _per_node_list(self, v, what: str) -> list | None:
+        if isinstance(v, (tuple, list)):
+            if len(v) != self.n_nodes:
+                raise ValueError(f"{what} has {len(v)} entries for "
+                                 f"{self.n_nodes} nodes")
+            return list(v)
+        return None                     # homogeneous scalar → config default
+
+    def resolve_capacity(self, n_tenants: int) -> tuple[int, list[int] | None]:
+        """(homogeneous per-node units, heterogeneous override)."""
+        if self.node_capacities is not None:
+            caps = self._per_node_list(self.node_capacities,
+                                       "node_capacities")
+            return caps[0], caps
+        if self.capacity_units is not None:
+            return self.capacity_units, None
+        return paper_capacity_units(n_tenants, self.n_nodes,
+                                    self.headroom), None
+
+
+@dataclass(frozen=True)
+class NodeFailure:
+    t: int                              # simulated second (fires at the
+    #                                     first chunk boundary ≥ t)
+    node: str                           # e.g. "edge1"
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    node_failures: tuple[NodeFailure, ...] = ()
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A complete, declarative experiment (see module docstring)."""
+
+    name: str
+    fleet: FleetSpec
+    topology: TopologySpec = TopologySpec()
+    faults: FaultSpec = FaultSpec()
+    placement: str = "least_loaded"
+    policies: tuple[str, ...] = SWEEP_POLICIES
+    duration_s: int = 1200
+    round_interval: int = 300
+    default_units: int = 16
+    slo_scale: float = 1.0
+    donation_fraction: float = 0.3
+    pricing: PricingModel = PricingModel.HYBRID
+    normalize_factors: bool = False
+    engine: str = "batched"
+    control_plane: str = "array"
+    rng_workers: int = 2
+    seed: int = 7
+    description: str = ""
+
+    def validate(self) -> None:
+        if self.fleet.size <= 0:
+            raise ValueError(f"scenario {self.name!r} has an empty fleet")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"placement {self.placement!r} not in "
+                             f"{sorted(PLACEMENTS)}")
+        bad = [p for p in self.policies if p not in SWEEP_POLICIES]
+        if bad:
+            raise ValueError(f"unknown policies {bad}; have {SWEEP_POLICIES}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine {self.engine!r} not in {ENGINES}")
+        node_names = {f"edge{i}" for i in range(self.topology.n_nodes)}
+        for f in self.faults.node_failures:
+            if f.node not in node_names:
+                raise ValueError(f"fault names unknown node {f.node!r}")
+
+    def federation_config(self, policy: str) -> FederationConfig:
+        """Compile this spec (for one scaling policy) onto the existing
+        federation machinery. A default least-loaded/homogeneous
+        scenario produces exactly the config the pre-scenario
+        experiments hand-wired — that is the bitwise contract."""
+        topo = self.topology
+        cap, caps = topo.resolve_capacity(self.fleet.size)
+        return FederationConfig(
+            n_nodes=topo.n_nodes,
+            duration_s=self.duration_s,
+            round_interval=self.round_interval,
+            capacity_units=cap,
+            node_capacities=caps,
+            default_units=self.default_units,
+            policy=policy,
+            slo_scale=self.slo_scale,
+            donation_fraction=self.donation_fraction,
+            pricing=self.pricing,
+            normalize_factors=self.normalize_factors,
+            engine=self.engine,
+            control_plane=self.control_plane,
+            rng_workers=self.rng_workers,
+            placement=self.placement,
+            node_wan_latency_s=topo._per_node_list(topo.wan_latency_s,
+                                                   "wan_latency_s"),
+            node_unit_price=topo._per_node_list(topo.unit_price,
+                                                "unit_price"),
+            node_failures=[(f.t, f.node) for f in self.faults.node_failures],
+            seed=self.seed,
+        )
+
+    def quick(self, round_interval: int = 60,
+              rounds: int = 4) -> "Scenario":
+        """A short-duration variant for smoke runs: the cadence shrinks
+        to ``rounds`` intervals of ``round_interval`` seconds and fault
+        times rescale proportionally (clamped inside the run so a
+        mid-session failure stays mid-session)."""
+        ri = min(self.round_interval, round_interval)
+        dur = rounds * ri
+        if dur >= self.duration_s:
+            return self
+        scale = dur / self.duration_s
+        faults = FaultSpec(tuple(
+            NodeFailure(max(ri, min(dur - ri, round(f.t * scale))), f.node)
+            for f in self.faults.node_failures))
+        return dataclasses.replace(self, duration_s=dur, round_interval=ri,
+                                   faults=faults)
+
+
+# ------------------------------------------------------------------ results
+@dataclass
+class PolicyOutcome:
+    """The uniform per-policy summary every scenario reports."""
+
+    policy: str
+    violation_rate: float                    # Eq. 1, federation-wide
+    per_node_vr: dict[str, float]
+    band_fractions: dict[str, float]         # latency/SLO bands (Figs. 6/7)
+    mean_round_overhead_s: dict[str, float]  # per node (Fig. 2 claim)
+    max_round_overhead_s: float
+    replaced: int                            # node→node migrations
+    cloud: int                               # tenants that ended on Cloud
+    wall_s: float
+
+
+@dataclass
+class ScenarioResult:
+    """Everything :func:`run_scenario` produces: the per-policy summary
+    rows (``outcomes``) plus the full per-policy
+    :class:`~repro.sim.federation.FederationResult` (``results``) for
+    anything the summary doesn't carry."""
+
+    name: str
+    scenario: Scenario
+    outcomes: dict[str, PolicyOutcome] = field(default_factory=dict)
+    results: dict[str, FederationResult] = field(default_factory=dict)
+
+    def placements(self, policy: str) -> list[PlacementEvent]:
+        """The placement timeline (admissions, re-placements, failovers,
+        Cloud fallbacks) of one policy's run."""
+        return self.results[policy].placements
+
+    def table(self) -> str:
+        sc = self.scenario
+        node_names = sorted(next(iter(self.results.values())).node_results)
+        cap, caps = sc.topology.resolve_capacity(sc.fleet.size)
+        cap_s = ("[" + " ".join(str(c) for c in caps) + "]u" if caps
+                 else f"{cap}u×{sc.topology.n_nodes}")
+        lines = [
+            f"scenario {self.name}: {sc.topology.n_nodes} nodes ({cap_s}), "
+            f"{sc.fleet.size} tenants, {sc.duration_s}s session, "
+            f"placement={sc.placement}, engine={sc.engine}"
+        ]
+        if sc.faults.node_failures:
+            lines.append("faults: " + ", ".join(
+                f"{f.node}@{f.t}s" for f in sc.faults.node_failures))
+        band_hdr = "  ".join(f"{b[:11]:>11}" for b, _, _ in BANDS)
+        lines.append(
+            f"{'policy':<8} {'fed-VR%':>7}  "
+            + "  ".join(f"{n:>7}" for n in node_names)
+            + f"  {band_hdr}  {'repl':>5} {'cloud':>5} {'max-ovh':>8}"
+            f" {'wall':>7}")
+        for policy, oc in self.outcomes.items():
+            per_node = "  ".join(
+                f"{oc.per_node_vr.get(n, 0.0) * 100:6.1f}%"
+                for n in node_names)
+            bands = "  ".join(f"{oc.band_fractions[b] * 100:10.1f}%"
+                              for b, _, _ in BANDS)
+            ovh = ("      —" if policy == "none"
+                   else f"{oc.max_round_overhead_s * 1e3:6.2f}ms")
+            lines.append(
+                f"{policy:<8} {oc.violation_rate * 100:6.1f}   {per_node}"
+                f"  {bands}  {oc.replaced:5d} {oc.cloud:5d} {ovh:>8}"
+                f" {oc.wall_s:6.2f}s")
+        worst = max((oc.max_round_overhead_s
+                     for p, oc in self.outcomes.items() if p != "none"),
+                    default=0.0)
+        if worst:
+            ok = "ok (paper: sub-second)" if worst < 1.0 else "VIOLATED"
+            lines.append(f"max per-node round overhead "
+                         f"{worst * 1e3:.2f}ms → {ok}")
+        return "\n".join(lines)
+
+
+def _band_fractions(res: FederationResult) -> dict[str, float]:
+    """Latency/SLO band fractions over the whole federation's
+    user-visible request distribution (Cloud requests included, with
+    their WAN penalty — as in Figs. 6/7)."""
+    lats = [r.latencies for r in res.node_results.values()
+            if r.latencies.size]
+    if not lats:
+        return {b: 0.0 for b, _, _ in BANDS}
+    lat = np.concatenate(lats)
+    slo = np.concatenate([r.slos for r in res.node_results.values()
+                          if r.slos.size])
+    out = {}
+    for b, lo, hi in BANDS:
+        sel = lat >= lo * slo
+        if hi != math.inf:
+            sel &= lat < hi * slo
+        out[b] = float(sel.mean())
+    return out
+
+
+def run_scenario(scenario: Scenario | str, *,
+                 policies: tuple[str, ...] | None = None,
+                 quick: bool = False) -> ScenarioResult:
+    """Compile and run a :class:`Scenario` (or a :data:`SCENARIOS` name)
+    across its policies; returns the uniform :class:`ScenarioResult`."""
+    if isinstance(scenario, str):
+        try:
+            scenario = SCENARIOS[scenario]
+        except KeyError:
+            raise ValueError(f"unknown scenario {scenario!r}; have "
+                             f"{sorted(SCENARIOS)}") from None
+    if quick:
+        scenario = scenario.quick()
+    scenario.validate()
+    out = ScenarioResult(name=scenario.name, scenario=scenario)
+    for policy in (policies or scenario.policies):
+        fleet = scenario.fleet.build()
+        cfg = scenario.federation_config(policy)
+        t0 = time.perf_counter()
+        res = EdgeFederation(fleet, cfg).run()
+        wall = time.perf_counter() - t0
+        over = res.mean_round_overhead_s
+        out.results[policy] = res
+        out.outcomes[policy] = PolicyOutcome(
+            policy=policy,
+            violation_rate=res.violation_rate,
+            per_node_vr=res.per_node_vr,
+            band_fractions=_band_fractions(res),
+            mean_round_overhead_s=over,
+            max_round_overhead_s=max(over.values(), default=0.0),
+            replaced=len(res.replaced),
+            cloud=len(res.cloud),
+            wall_s=wall,
+        )
+    return out
+
+
+# ----------------------------------------------------------------- registry
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def register_scenario(sc: Scenario) -> Scenario:
+    """Add a named scenario to the registry (last registration wins)."""
+    SCENARIOS[sc.name] = sc
+    return sc
+
+
+def format_registry() -> str:
+    """One line per registry entry (the --list output of both the
+    scenario CLI and examples/federation_demo.py)."""
+    return "\n".join(f"{name:<28} {sc.description}"
+                     for name, sc in SCENARIOS.items())
+
+
+register_scenario(Scenario(
+    name="paper_game_32",
+    description="Paper §5 iPokeMon setup federated: 32 game tenants on "
+                "4 least-loaded nodes at paper capacity (+16u headroom).",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 32),)),
+    topology=TopologySpec(n_nodes=4, headroom=16),
+))
+
+register_scenario(Scenario(
+    name="paper_face_detection",
+    description="Paper §5 Face Detection setup federated: 32 streaming "
+                "tenants (0.1–1 fps) on 4 nodes at paper capacity.",
+    fleet=FleetSpec(classes=(TenantClassSpec("stream", 32),)),
+    topology=TopologySpec(n_nodes=4, headroom=16),
+))
+
+register_scenario(Scenario(
+    name="mixed_fleet",
+    description="Mixed multi-tenancy: 16 game + 16 stream tenants share "
+                "the same 4 nodes, so both workload classes contend on "
+                "every node (ROADMAP: mixed game+stream fleets).",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 16),
+                             TenantClassSpec("stream", 16))),
+    topology=TopologySpec(n_nodes=4, headroom=16),
+))
+
+register_scenario(Scenario(
+    name="hetero_one_big_many_small",
+    description="EdgeOS-style asymmetric fleet: one big node + three "
+                "dense cheap nodes, same total capacity as the "
+                "homogeneous paper split (552u); price-aware placement "
+                "favours the cheap small nodes first.",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 32),)),
+    topology=TopologySpec(n_nodes=4,
+                          node_capacities=(300, 84, 84, 84),
+                          unit_price=(2.0, 1.0, 1.0, 1.0)),
+    placement="price_aware",
+))
+
+register_scenario(Scenario(
+    name="node_failure_midrun",
+    description="Fault injection: edge1 dies at t=600 (mid-session); "
+                "its whole fleet re-places on the surviving siblings "
+                "(48u headroom each absorbs a few refugees) or falls "
+                "back to the Cloud over heterogeneous WAN links.",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 32),)),
+    topology=TopologySpec(n_nodes=4, headroom=48,
+                          wan_latency_s=(0.06, 0.12, 0.12, 0.24)),
+    faults=FaultSpec((NodeFailure(t=600, node="edge1"),)),
+))
+
+
+# ---------------------------------------------------------------- CLI smoke
+def main(argv: list[str] | None = None) -> int:
+    """Registry smoke runner (the CI step): run named scenarios and fail
+    on any exception or non-finite violation rate."""
+    ap = argparse.ArgumentParser(
+        description="Run named federation scenarios from the registry.")
+    ap.add_argument("--scenario", action="append", default=None,
+                    metavar="NAME", help="scenario to run (repeatable; "
+                    "default: every registry entry)")
+    ap.add_argument("--quick", action="store_true",
+                    help="short-duration smoke variant of each scenario")
+    ap.add_argument("--list", action="store_true",
+                    help="list registry entries and exit")
+    args = ap.parse_args(argv)
+    if args.list:
+        print(format_registry())
+        return 0
+    failures = []
+    for name in (args.scenario or list(SCENARIOS)):
+        res = run_scenario(name, quick=args.quick)
+        print(res.table())
+        print()
+        for policy, oc in res.outcomes.items():
+            if not math.isfinite(oc.violation_rate):
+                failures.append(f"{name}/{policy}: VR={oc.violation_rate}")
+    if failures:
+        print("NON-FINITE VIOLATION RATES:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -386,13 +386,14 @@ def _jax_latency_scale(base_pf, alpha, demand, capacity) -> np.ndarray:
 
 
 def make_game_fleet(n: int, rng: np.random.Generator,
-                    base_latency: float = 0.078) -> list[GameWorkload]:
+                    base_latency: float = 0.078,
+                    prefix: str = "game") -> list[GameWorkload]:
     """n tenants, each 1–100 users (paper §5), heterogeneous demand."""
     fleet = []
     for i in range(n):
         users = int(rng.integers(1, 101))
         fleet.append(GameWorkload(
-            name=f"game-{i}", base_latency=base_latency,
+            name=f"{prefix}-{i}", base_latency=base_latency,
             work_per_request=1.0,
             # default 16 units violate above ~94 users nominally, ~87 at
             # burst peak → ≈18% time-avg demand-weighted overflow (paper's
@@ -404,13 +405,14 @@ def make_game_fleet(n: int, rng: np.random.Generator,
 
 
 def make_stream_fleet(n: int, rng: np.random.Generator,
-                      base_latency: float = 2.13) -> list[StreamWorkload]:
+                      base_latency: float = 2.13,
+                      prefix: str = "fd") -> list[StreamWorkload]:
     """n tenants, each 0.1–1 fps (paper §5)."""
     fleet = []
     for i in range(n):
         fps = float(rng.uniform(0.1, 1.0))
         fleet.append(StreamWorkload(
-            name=f"fd-{i}", base_latency=base_latency,
+            name=f"{prefix}-{i}", base_latency=base_latency,
             work_per_request=8.0,
             # default 16 units saturate at ~0.90 fps → ≈19% nominal overflow
             unit_rate=0.35,

@@ -2,12 +2,13 @@
 and federation-level SLO accounting."""
 import dataclasses
 
-import numpy as np
 import pytest
 
 from repro.core.types import RoundReport
-from repro.sim import EdgeFederation, FederationConfig
-from repro.sim.workload import GameWorkload, make_game_fleet
+from repro.sim import (EdgeFederation, FederationConfig, FleetSpec,
+                       Scenario, TenantClassSpec, TopologySpec,
+                       run_scenario)
+from repro.sim.workload import GameWorkload
 
 
 def game(name, users=50):
@@ -115,11 +116,12 @@ def test_evicted_tenant_falls_back_to_cloud_when_no_sibling_fits():
 
 
 def test_replacement_happens_in_real_runs():
-    rng = np.random.default_rng(42)
-    cfg = FederationConfig(n_nodes=4, duration_s=600, round_interval=150,
-                           capacity_units=130, policy="sdps", seed=1)
-    fed = EdgeFederation(make_game_fleet(32, rng), cfg)
-    res = fed.run()
+    sc = Scenario(
+        name="replacement_check",
+        fleet=FleetSpec(classes=(TenantClassSpec("game", 32),)),
+        topology=TopologySpec(n_nodes=4, capacity_units=130),
+        duration_s=600, round_interval=150, seed=1, engine="vectorized")
+    res = run_scenario(sc, policies=("sdps",)).results["sdps"]
     assert res.replaced, "expected Procedure 3 evictions to re-place"
     for ev in res.placements:
         if ev.kind == "replace":
@@ -128,10 +130,12 @@ def test_replacement_happens_in_real_runs():
 
 # ------------------------------------------------------- SLO accounting
 def test_federation_vr_is_request_weighted_mean_of_node_rates():
-    rng = np.random.default_rng(42)
-    cfg = FederationConfig(n_nodes=3, duration_s=480, round_interval=120,
-                           capacity_units=200, policy="sps", seed=9)
-    res = EdgeFederation(make_game_fleet(24, rng), cfg).run()
+    sc = Scenario(
+        name="vr_weighting_check",
+        fleet=FleetSpec(classes=(TenantClassSpec("game", 24),)),
+        topology=TopologySpec(n_nodes=3, capacity_units=200),
+        duration_s=480, round_interval=120, seed=9, engine="vectorized")
+    res = run_scenario(sc, policies=("sps",)).results["sps"]
     weighted = sum(r.violation_rate * r.total_requests
                    for r in res.node_results.values())
     total = sum(r.total_requests for r in res.node_results.values())
@@ -140,12 +144,16 @@ def test_federation_vr_is_request_weighted_mean_of_node_rates():
 
 
 def test_federation_engines_agree():
+    sc = Scenario(
+        name="engine_agreement_check",
+        fleet=FleetSpec(classes=(TenantClassSpec("game", 16),)),
+        topology=TopologySpec(n_nodes=2, capacity_units=130),
+        duration_s=360, round_interval=120, seed=4)
+
     def run(engine):
-        rng = np.random.default_rng(42)
-        cfg = FederationConfig(n_nodes=2, duration_s=360, round_interval=120,
-                               capacity_units=130, policy="sdps", seed=4,
-                               engine=engine)
-        return EdgeFederation(make_game_fleet(16, rng), cfg).run()
+        import dataclasses
+        spec = dataclasses.replace(sc, engine=engine)
+        return run_scenario(spec, policies=("sdps",)).results["sdps"]
 
     s, v = run("scalar"), run("vectorized")
     assert v.violation_rate == s.violation_rate

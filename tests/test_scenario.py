@@ -1,0 +1,368 @@
+"""Declarative scenario API: spec compilation, the named registry,
+pluggable placement policies, node-failure faults, and the bitwise
+equivalence of `run_scenario` with the pre-refactor hand-wired path."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.sim import (SCENARIOS, EdgeFederation, FaultSpec,
+                       FederationConfig, FleetSpec, NodeFailure,
+                       Scenario, TenantClassSpec, TopologySpec,
+                       paper_capacity_units, run_scenario)
+from repro.sim.workload import GameWorkload, make_game_fleet
+
+
+def game(name, users=50):
+    return GameWorkload(name=name, base_latency=0.078, work_per_request=1.0,
+                        unit_rate=2.05, n_users=users, rate_per_user=0.5)
+
+
+def _federation_results_equal(a, b):
+    assert a.placements == b.placements
+    assert a.per_node_vr == b.per_node_vr
+    assert a.violation_rate == b.violation_rate
+    assert a.replaced == b.replaced and a.cloud == b.cloud
+    for n, ra in a.node_results.items():
+        rb = b.node_results[n]
+        assert np.array_equal(ra.latencies, rb.latencies)
+        assert ra.per_minute_vr == rb.per_minute_vr
+        assert ra.round_actions == rb.round_actions   # action streams
+        assert ra.terminated == rb.terminated
+
+
+# ------------------------------------------------------------ equivalence
+def test_run_scenario_matches_handwired_construction_bitwise():
+    """Acceptance: the default least-loaded/homogeneous spec compiles to
+    exactly the pre-scenario hand-wired construction — placement events,
+    action streams, latencies and per-node VR all bitwise equal."""
+    sc = dataclasses.replace(SCENARIOS["paper_game_32"],
+                             duration_s=240, round_interval=60)
+    got = run_scenario(sc, policies=("sdps",)).results["sdps"]
+    # the construction every experiment hand-wired before this API
+    fleet = make_game_fleet(32, np.random.default_rng(42))
+    cfg = FederationConfig(
+        n_nodes=4, duration_s=240, round_interval=60,
+        capacity_units=paper_capacity_units(32, 4, headroom=16),
+        policy="sdps", seed=7, engine="batched")
+    ref = EdgeFederation(fleet, cfg).run()
+    _federation_results_equal(got, ref)
+
+
+LEGACY_SORT = "sorted by (load_fraction_after, name) with can_admit filter"
+
+
+def _legacy_feasible_nodes(self, wl, exclude=None):
+    """The pre-refactor hardwired EdgeFederation._feasible_nodes body,
+    kept verbatim (modulo the pass-through wl argument) as the pin for
+    the pluggable least_loaded policy."""
+    cands = [n for n in self.nodes
+             if n is not exclude and n.ctrl.can_admit()]
+    return sorted(cands,
+                  key=lambda n: (n.ctrl.load_fraction_after(), n.name))
+
+
+@pytest.mark.parametrize("control_plane", ["array", "reference"])
+def test_least_loaded_hook_bitwise_vs_legacy_hardwired(monkeypatch,
+                                                       control_plane):
+    """Satellite: least_loaded via the PlacementPolicy hook reproduces
+    the pre-refactor hardwired sort bitwise — action streams + per-node
+    VR, both control planes, batched engine. Capacity 130 forces
+    Procedure-3 evictions, so re-placement goes through the hook too."""
+    def run(legacy: bool):
+        if legacy:
+            monkeypatch.setattr(EdgeFederation, "_feasible_nodes",
+                                _legacy_feasible_nodes)
+        else:
+            monkeypatch.undo()
+        rng = np.random.default_rng(42)
+        cfg = FederationConfig(
+            n_nodes=2, duration_s=360, round_interval=120,
+            capacity_units=130, policy="sdps", seed=4, engine="batched",
+            control_plane=control_plane)
+        return EdgeFederation(make_game_fleet(16, rng), cfg).run()
+
+    _federation_results_equal(run(legacy=False), run(legacy=True))
+
+
+# ---------------------------------------------------------------- registry
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_registry_scenario_runs_quick(name):
+    res = run_scenario(name, policies=("none", "sdps"), quick=True)
+    for policy, oc in res.outcomes.items():
+        assert math.isfinite(oc.violation_rate), (name, policy)
+        assert 0.0 <= oc.violation_rate <= 1.0
+    assert name in res.table()
+
+
+def test_run_scenario_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        run_scenario("no_such_scenario")
+
+
+def test_scenario_validation_rejects_bad_specs():
+    base = SCENARIOS["paper_game_32"]
+    with pytest.raises(ValueError, match="placement"):
+        run_scenario(dataclasses.replace(base, placement="nope"),
+                     quick=True)
+    with pytest.raises(ValueError, match="policies"):
+        run_scenario(dataclasses.replace(base, policies=("sdps", "bogus")),
+                     quick=True)
+    with pytest.raises(ValueError, match="unknown node"):
+        run_scenario(dataclasses.replace(
+            base, faults=FaultSpec((NodeFailure(t=60, node="edge9"),))),
+            quick=True)
+    with pytest.raises(ValueError, match="empty fleet"):
+        run_scenario(dataclasses.replace(base, fleet=FleetSpec()),
+                     quick=True)
+
+
+def test_quick_rescales_fault_times_proportionally():
+    sc = SCENARIOS["node_failure_midrun"]
+    q = sc.quick()
+    assert (q.duration_s, q.round_interval) == (240, 60)
+    # t=600 of 1200 s scales to 120 of 240 s — still mid-session
+    assert q.faults.node_failures == (NodeFailure(t=120, node="edge1"),)
+
+
+def test_mixed_fleet_has_unique_names_across_classes():
+    fleet = SCENARIOS["mixed_fleet"].fleet.build()
+    names = [w.name for w in fleet]
+    assert len(set(names)) == len(names) == 32
+    kinds = {type(w).__name__ for w in fleet}
+    assert kinds == {"GameWorkload", "StreamWorkload"}
+
+
+# ------------------------------------------------------- heterogeneous caps
+def test_hetero_capacities_honored_end_to_end():
+    """Satellite: node_capacities flows through placement, per-node VR
+    and accounting; the same fleet on a homogeneous split of the same
+    total capacity serves the same total demand."""
+    base = Scenario(
+        name="hetero_check",
+        fleet=FleetSpec(classes=(TenantClassSpec("game", 16),)),
+        topology=TopologySpec(n_nodes=4, node_capacities=(160, 48, 48, 48)),
+        duration_s=240, round_interval=60, seed=7)
+    homog = dataclasses.replace(
+        base, name="homog_check",
+        topology=TopologySpec(n_nodes=4, capacity_units=76))  # same 304u
+    rh = run_scenario(base, policies=("sdps",)).results["sdps"]
+    ro = run_scenario(homog, policies=("sdps",)).results["sdps"]
+    # placement honors the asymmetric capacities: the big node hosts
+    # strictly more tenants than any 48u node (which fits only 3×16u)
+    hosted = {n: sum(1 for e in rh.placements
+                     if e.kind == "admit" and e.node == n)
+              for n in rh.per_node_vr}
+    assert hosted["edge0"] > max(hosted[n] for n in hosted if n != "edge0")
+    assert sum(hosted.values()) == 16          # nobody overflowed to Cloud
+    # per-node VR is reported for every node in both topologies
+    assert set(rh.per_node_vr) == set(ro.per_node_vr)
+    # identical fleet + per-tenant RNG substreams → identical total
+    # demand, however the topology splits it (Edge-hosted in both runs)
+    assert rh.total_requests == ro.total_requests
+    for r in (rh, ro):
+        assert math.isfinite(r.violation_rate)
+
+
+def test_hetero_eviction_replacement_respects_small_node_capacity():
+    # 6 tenants fill the asymmetric fleet exactly (4×16u on edge0,
+    # 2×16u on edge1); a refugee from edge0 cannot fit on the small
+    # node and must fall back to the Cloud
+    fleet = [game(f"g{i}") for i in range(6)]
+    cfg = FederationConfig(n_nodes=2, node_capacities=[64, 32],
+                           duration_s=240, round_interval=120,
+                           default_units=16, policy="sdps", seed=3)
+    fed = EdgeFederation(fleet, cfg)
+    from repro.core.types import RoundReport
+    a = fed.nodes[0]
+    victim = next(iter(a.ctrl.registry))
+    report = RoundReport(policy="sdps")
+    a.ctrl._terminate(victim, report, reason="test")
+    fed._replace_terminated(a, report.terminated, t=120)
+    ev = fed.placements[-1]
+    assert (ev.kind, ev.node) == ("cloud", None)
+
+
+# ------------------------------------------------------- placement policies
+def _policy_fed(placement, n=3, **topo_kw):
+    cfg = FederationConfig(n_nodes=n, capacity_units=32, duration_s=120,
+                           round_interval=60, default_units=16,
+                           policy="sdps", seed=0, placement=placement,
+                           **topo_kw)
+    return EdgeFederation([game(f"g{i}") for i in range(4)], cfg)
+
+
+def test_locality_placement_prefers_cheap_wan_link():
+    fed = _policy_fed("locality",
+                      node_wan_latency_s=[0.30, 0.05, 0.12])
+    order = [e.node for e in fed.placements]
+    # edge1 (cheapest WAN) fills first (2×16u), then edge2, never edge0
+    assert order == ["edge1", "edge1", "edge2", "edge2"]
+
+
+def test_price_aware_placement_prefers_cheap_units():
+    fed = _policy_fed("price_aware",
+                      node_unit_price=[3.0, 1.0, 2.0])
+    order = [e.node for e in fed.placements]
+    assert order == ["edge1", "edge1", "edge2", "edge2"]
+
+
+def test_unknown_placement_rejected():
+    with pytest.raises(ValueError, match="placement"):
+        _policy_fed("round_robin")
+
+
+def test_custom_placement_object_accepted():
+    class ReverseName:
+        name = "reverse"
+
+        def key(self, node, wl):
+            return (tuple(-ord(c) for c in node.name),)
+
+    fed = _policy_fed(ReverseName())
+    assert fed.placements[0].node == "edge2"
+
+
+# ---------------------------------------------------------------- WAN links
+def test_per_node_wan_latency_applies_to_cloud_requests():
+    # two nodes full at 2 tenants each; the 5th tenant overflows to the
+    # Cloud hosted on edge0, whose WAN link costs 0.5 s
+    fleet = [game(f"g{i}") for i in range(5)]
+    cfg = FederationConfig(n_nodes=2, capacity_units=32, duration_s=120,
+                           round_interval=60, policy="none", seed=3,
+                           node_wan_latency_s=[0.5, 0.12])
+    fed = EdgeFederation(fleet, cfg)
+    assert fed.placements[-1].kind == "cloud"
+    res = fed.run()
+    host = fed.nodes[0]
+    assert fed.placements[-1].tenant in host.evicted
+    lat = res.node_results["edge0"].latencies
+    # every Cloud request pays ≥ the host's 0.5 s WAN round-trip; the
+    # Edge tenants' own requests stay well under it (base 78 ms)
+    cloud_requests = lat[lat >= 0.5]
+    assert cloud_requests.size > 0
+
+
+# ------------------------------------------------------------- node faults
+def _failure_cfg(**kw):
+    defaults = dict(n_nodes=3, capacity_units=96, duration_s=240,
+                    round_interval=60, default_units=16, policy="sdps",
+                    seed=3, node_failures=[(60, "edge1")])
+    defaults.update(kw)
+    return FederationConfig(**defaults)
+
+
+def test_node_failure_replaces_whole_node_on_siblings():
+    fleet = [game(f"g{i}") for i in range(9)]        # 3 per node
+    fed = EdgeFederation(fleet, _failure_cfg())
+    on_edge1 = set(fed.nodes[1].workloads)
+    assert len(on_edge1) == 3
+    res = fed.run()
+    assert res.failed_nodes == ["edge1"]
+    # the dead node hosts nothing and its controller is empty
+    assert not fed.nodes[1].workloads
+    assert not fed.nodes[1].ctrl.registry
+    # every tenant it hosted re-placed on a sibling at the boundary
+    fo = [e for e in res.placements if e.kind == "failover"]
+    assert {e.tenant for e in fo} == on_edge1
+    assert all(e.t == 60 and e.source == "edge1"
+               and e.node in ("edge0", "edge2") for e in fo)
+    assert on_edge1 <= set(res.replaced)
+    # the dead node's pre-failure service still counts in Eq. 1
+    assert res.node_results["edge1"].total_requests > 0
+
+
+def test_node_failure_preserves_total_demand():
+    """Refugees carry their RNG substreams, so the fleet's Edge-serviced
+    request total is identical with and without the failure (all nine
+    tenants stay Edge-hosted — the siblings have room)."""
+    fleet = [game(f"g{i}") for i in range(9)]
+    with_fail = EdgeFederation(fleet, _failure_cfg()).run()
+    without = EdgeFederation(fleet, _failure_cfg(node_failures=[])).run()
+    assert with_fail.total_requests == without.total_requests
+    assert not with_fail.cloud
+
+
+def test_node_failure_overflows_to_cloud_when_siblings_full():
+    # every node exactly full: refugees have no sibling home
+    fleet = [game(f"g{i}") for i in range(9)]
+    fed = EdgeFederation(fleet, _failure_cfg(capacity_units=48))
+    on_edge1 = set(fed.nodes[1].workloads)
+    res = fed.run()
+    assert set(res.cloud) >= on_edge1
+    kinds = {e.kind for e in res.placements if e.source == "edge1"}
+    assert kinds == {"cloud"}
+    # Cloud hosting moved to a LIVE node — the dead node serves nothing
+    assert not fed.nodes[1].workloads
+
+
+def test_node_failure_engines_agree_bitwise():
+    def run(engine):
+        fleet = [game(f"g{i}") for i in range(9)]
+        return EdgeFederation(fleet, _failure_cfg(engine=engine)).run()
+
+    _federation_results_equal(run("batched"), run("scalar"))
+    _federation_results_equal(run("batched"), run("vectorized"))
+
+
+def test_failure_refugee_keeps_spec_and_is_not_aged():
+    """A failure is the infrastructure's fault: the refugee keeps its
+    donation/premium contract and is NOT charged Age_s (unlike a
+    Procedure-3 eviction)."""
+    fleet = [game(f"g{i}") for i in range(9)]
+    fed = EdgeFederation(fleet, _failure_cfg())
+    node = fed.nodes[1]
+    name = next(iter(node.ctrl.registry))
+    st0 = node.ctrl.registry[name]
+    spec0, age0 = st0.spec, st0.age
+    fed._apply_failures(60)
+    new_node = next(n for n in fed.nodes
+                    if name in n.ctrl.registry)
+    st1 = new_node.ctrl.registry[name]
+    assert st1.spec.donation == spec0.donation
+    assert st1.spec.premium == spec0.premium
+    assert st1.age == age0                       # no Age_s penalty
+
+
+def test_failure_config_validation():
+    with pytest.raises(ValueError, match="unknown node"):
+        EdgeFederation([], _failure_cfg(node_failures=[(60, "edge7")]))
+    with pytest.raises(ValueError, match="every node"):
+        EdgeFederation([], _failure_cfg(
+            node_failures=[(60, "edge0"), (60, "edge1"), (120, "edge2")]))
+    with pytest.raises(ValueError, match="> 0"):
+        EdgeFederation([], _failure_cfg(node_failures=[(0, "edge1")]))
+    # a failure whose chunk boundary lands at (or past) the run end
+    # would never fire — rejected, not silently dropped
+    with pytest.raises(ValueError, match="never fire"):
+        EdgeFederation([], _failure_cfg(node_failures=[(200, "edge1")]))
+    with pytest.raises(ValueError, match="never fire"):
+        EdgeFederation([], _failure_cfg(node_failures=[(999, "edge1")]))
+
+
+def test_duplicate_failure_entries_for_one_node_allowed():
+    # two schedule entries for the same node must not trip the
+    # "kills every node" guard: the second entry is a no-op
+    fleet = [game(f"g{i}") for i in range(9)]
+    fed = EdgeFederation(fleet, _failure_cfg(
+        node_failures=[(60, "edge1"), (120, "edge1")]))
+    res = fed.run()
+    assert res.failed_nodes == ["edge1"]
+
+
+def test_topology_accepts_lists_for_per_node_values():
+    # lists and tuples are interchangeable in per-node topology fields
+    sc = Scenario(
+        name="list_topo",
+        fleet=FleetSpec(classes=(TenantClassSpec("game", 4),)),
+        topology=TopologySpec(n_nodes=2, node_capacities=[64, 32],
+                              wan_latency_s=[0.3, 0.12],
+                              unit_price=[2.0, 1.0]),
+        duration_s=120, round_interval=60)
+    res = run_scenario(sc, policies=("sdps",)).results["sdps"]
+    assert math.isfinite(res.violation_rate)
+    cfg = sc.federation_config("sdps")
+    assert cfg.node_capacities == [64, 32]
+    assert cfg.node_wan_latency_s == [0.3, 0.12]
+    assert cfg.node_unit_price == [2.0, 1.0]
