@@ -1,7 +1,9 @@
 """Federation benchmarks: engine trio speedup + multi-node policy sweep
 + fleet-scale (≥1M tenant-second) batched-engine sweep
 + control-plane-bound tenants × round_interval sweep (``ctrlscale``)
-+ named-scenario walls (``scenarios``).
++ named-scenario walls (``scenarios``)
++ reactive vs proactive vs hybrid scaling sweep (``forecast``,
+  BENCH_forecast.json).
 
 ``engine_speedup`` measures all three execution engines on the paper's
 32-tenant / 1200 s scenario (identical seeded trace, so the comparison
@@ -281,6 +283,76 @@ def control_plane_scale(quick: bool = False, repeats: int = 5) -> list[dict]:
     return rows
 
 
+# ------------------------------------------------------------- forecast
+def _nonviolated_latency_s(fed_result) -> float:
+    """Mean latency of the requests that met their SLO, over the whole
+    federation's user-visible distribution — the quality-of-service
+    companion to VR: a policy could trivially cut VR by hurting the
+    latency of everything that still complies."""
+    lats, slos = [], []
+    for r in fed_result.node_results.values():
+        if r.latencies.size:
+            lats.append(r.latencies)
+            slos.append(r.slos)
+    if not lats:
+        return 0.0
+    lat = np.concatenate(lats)
+    ok = lat <= np.concatenate(slos)
+    return float(lat[ok].mean()) if ok.any() else 0.0
+
+
+def forecast_sweep(quick: bool = False, repeats: int = 3) -> list[dict]:
+    """``forecast``: reactive vs proactive vs hybrid scaling at an equal
+    resource budget (same fleet, same topology, same seed) on the two
+    proactive registry scenarios. Per row: federation VR, the VR delta
+    vs that scenario's reactive baseline (negative = fewer violations),
+    mean non-violated latency, forecast overhead, and min-of-``repeats``
+    walls. Raises on any non-finite VR — in the CI ``--quick`` smoke a
+    broken forecast path fails the build instead of persisting NaN."""
+    if quick:
+        repeats = 1
+    rows = []
+    for name in ("proactive_game_32", "proactive_face_detection"):
+        sc = SCENARIOS[name]
+        base_vr: float | None = None
+        for spol in sc.scaling_policies:
+            walls, res = [], None
+            for _ in range(max(repeats, 1)):
+                t0 = time.perf_counter()
+                res = run_scenario(sc, policies=("sdps",),
+                                   scaling_policies=(spol,), quick=quick)
+                walls.append(time.perf_counter() - t0)
+            oc = res.outcomes["sdps"]
+            if not math.isfinite(oc.violation_rate):
+                raise AssertionError(
+                    f"{name}/{spol}: non-finite VR {oc.violation_rate}")
+            if spol == "reactive":
+                base_vr = oc.violation_rate
+            fr = res.results["sdps"]
+            fc_walls = [w for r in fr.node_results.values()
+                        for w in r.overhead_forecast_s]
+            rows.append({
+                "scenario": name,
+                "scaling_policy": spol,
+                "forecaster": sc.forecaster,
+                "tenants": res.scenario.fleet.size,
+                "n_nodes": res.scenario.topology.n_nodes,
+                "duration_s": res.scenario.duration_s,
+                "round_interval": res.scenario.round_interval,
+                "violation_rate": oc.violation_rate,
+                "vr_delta_vs_reactive": (oc.violation_rate - base_vr
+                                         if base_vr is not None else 0.0),
+                "nonviolated_latency_s": _nonviolated_latency_s(fr),
+                "mean_forecast_overhead_s": (sum(fc_walls) / len(fc_walls)
+                                             if fc_walls else 0.0),
+                "max_round_overhead_s": oc.max_round_overhead_s,
+                "replaced": oc.replaced,
+                "cloud": oc.cloud,
+                "wall_s": min(walls),
+            })
+    return rows
+
+
 # ------------------------------------------------------------- scenarios
 def scenario_walls(quick: bool = False, repeats: int = 3) -> list[dict]:
     """``scenarios``: min-of-``repeats`` wall clock for every named
@@ -297,7 +369,12 @@ def scenario_walls(quick: bool = False, repeats: int = 3) -> list[dict]:
         walls, res = [], None
         for _ in range(max(repeats, 1)):
             t0 = time.perf_counter()
-            res = run_scenario(sc, policies=("sdps",), quick=quick)
+            # one scaling policy per wall (the scenario's first entry)
+            # so sweep scenarios stay one comparable row; the forecast
+            # section owns the reactive-vs-proactive comparison
+            res = run_scenario(sc, policies=("sdps",),
+                               scaling_policies=sc.scaling_policies[:1],
+                               quick=quick)
             walls.append(time.perf_counter() - t0)
         oc = res.outcomes["sdps"]
         if not math.isfinite(oc.violation_rate):

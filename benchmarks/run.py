@@ -206,6 +206,22 @@ def main() -> None:
                 f"max-ovh={r['max_round_overhead_s'] * 1e3:.2f}ms")
         _persist_section("scenarios", rows, args.quick)
 
+    if want("forecast"):
+        from benchmarks import federation_bench
+        rows = federation_bench.forecast_sweep(quick=args.quick)
+        results["forecast"] = rows
+        for r in rows:
+            _csv(
+                f"forecast/{r['scenario']}/{r['scaling_policy']}",
+                r["wall_s"] * 1e6,
+                f"VR={r['violation_rate'] * 100:.2f}% "
+                f"(Δ vs reactive "
+                f"{r['vr_delta_vs_reactive'] * 100:+.2f}pp) "
+                f"nv-lat={r['nonviolated_latency_s'] * 1e3:.1f}ms "
+                f"fc-ovh={r['mean_forecast_overhead_s'] * 1e6:.0f}us "
+                f"[{r['forecaster']}]")
+        _persist_section("forecast", rows, args.quick)
+
     if want("roofline"):
         from benchmarks.roofline_report import roofline_table
         rows = roofline_table()

@@ -2,7 +2,16 @@
 
   PYTHONPATH=src python examples/federation_demo.py [--scenario NAME]
   [--nodes N] [--tenants N] [--duration S] [--seed S] [--engine E]
-  [--placement P] [--quick] [--list-scenarios]
+  [--placement P] [--policy SP] [--forecaster F] [--quick]
+  [--list-scenarios]
+
+``--policy`` overrides the scenario's scaling-policy sweep with a single
+ScalingPolicy (``reactive`` | ``proactive`` | ``hybrid``) and
+``--forecaster`` picks the forecaster the proactive/hybrid rounds use
+(``last_value`` | ``ewma`` | ``linear_trend`` | ``seasonal_naive``) —
+e.g. ``--scenario proactive_game_32 --policy proactive --forecaster
+linear_trend``. The priority-policy axis is still the scenario's
+``policies`` sweep.
 
 The default scenario is ``paper_game_32`` — 4 Edge nodes × 32 iPokeMon
 tenants, all five scaling policies, exactly the hand-wired setup this
@@ -44,6 +53,10 @@ def _apply_overrides(sc, args):
         sc = dataclasses.replace(sc, engine=args.engine)
     if args.placement is not None:
         sc = dataclasses.replace(sc, placement=args.placement)
+    if args.policy is not None:
+        sc = dataclasses.replace(sc, scaling_policies=(args.policy,))
+    if args.forecaster is not None:
+        sc = dataclasses.replace(sc, forecaster=args.forecaster)
     return sc
 
 
@@ -65,6 +78,16 @@ def main():
                          "as one matrix per chunk)")
     ap.add_argument("--placement", default=None,
                     choices=["least_loaded", "locality", "price_aware"])
+    ap.add_argument("--policy", default=None,
+                    choices=["reactive", "proactive", "hybrid"],
+                    help="override the scenario's ScalingPolicy sweep "
+                         "with one policy (reactive keeps the paper's "
+                         "Procedure 2; proactive scales on the forecast "
+                         "before violations land)")
+    ap.add_argument("--forecaster", default=None,
+                    choices=["last_value", "ewma", "linear_trend",
+                             "seasonal_naive"],
+                    help="forecaster used by proactive/hybrid scaling")
     ap.add_argument("--quick", action="store_true",
                     help="short-duration smoke variant")
     args = ap.parse_args()

@@ -1,6 +1,12 @@
 """DYVERSE core: the paper's contribution as a composable library."""
 from repro.core.controller import (CONTROL_PLANES, AdmissionResult,  # noqa: F401
                                    DyverseController, NullActuator)
+from repro.core.forecast import (FORECASTERS, SCALING_POLICIES,  # noqa: F401
+                                 EwmaForecaster, ForecastEngine,
+                                 Forecaster, ForecastFrame, HistoryWindow,
+                                 LastValueForecaster, LinearTrendForecaster,
+                                 RoundHistory, SeasonalNaiveForecaster,
+                                 resolve_forecaster)
 from repro.core.monitor import (DictMonitor, Monitor, RoundMetrics,  # noqa: F401
                                 SlotTable)
 from repro.core.priority import (POLICIES, batch_scores,  # noqa: F401

@@ -29,6 +29,17 @@ round then
 (with :class:`~repro.core.monitor.DictMonitor`) — the two paths are
 bitwise-identical, pinned by the control-plane equivalence tests and the
 ``ctrlscale`` benchmark.
+
+Orthogonally, ``scaling_policy`` selects what a round scales ON
+(:mod:`repro.core.forecast`): ``"reactive"`` (default) keeps the
+paper's Procedure 2 bitwise-identical to the pre-forecast controller;
+``"proactive"`` pre-scales tenants their forecast predicts will violate
+(from free headroom, never evictions) while realised violations keep
+full Procedure-2 mechanics; ``"hybrid"`` additionally falls back to the
+pure reactive branch wherever the forecast has recently been wrong. The
+per-round metric history feeding the forecasters is recorded at every
+``roll_round`` under ALL scaling policies — recording is deterministic
+numpy and draws no randomness, so it cannot perturb the reactive path.
 """
 from __future__ import annotations
 
@@ -38,6 +49,8 @@ from typing import Callable, Protocol
 
 import numpy as np
 
+from repro.core.forecast import (SCALING_POLICIES, Forecaster,
+                                 ForecastEngine)
 from repro.core.monitor import DictMonitor, Monitor, SlotTable
 from repro.core.priority import (POLICIES, batch_scores_normalized,
                                  batch_scores_np)
@@ -170,20 +183,38 @@ class DyverseController:
                  default_units: int = 4,
                  network_ok: Callable[[str], bool] | None = None,
                  normalize_factors: bool = False,
-                 control_plane: str = "array"):
+                 control_plane: str = "array",
+                 scaling_policy: str = "reactive",
+                 forecaster: str | Forecaster = "ewma",
+                 forecast_window: int = 16,
+                 hybrid_vr_band: float = 0.15):
         if policy not in POLICIES and policy != "none":
             raise ValueError(f"policy {policy!r} not in {POLICIES + ('none',)}")
         if control_plane not in CONTROL_PLANES:
             raise ValueError(
                 f"control_plane {control_plane!r} not in {CONTROL_PLANES}")
+        if scaling_policy not in SCALING_POLICIES:
+            raise ValueError(
+                f"scaling_policy {scaling_policy!r} not in {SCALING_POLICIES}")
         self.pool = ResourcePool(capacity, uR)
         self.control_plane = control_plane
         if control_plane == "array":
             self.monitor = Monitor()
             self._cols: _StateCols | None = _StateCols(self.monitor.slots)
+            # the forecast history shares the Monitor's slot table: one
+            # slot id indexes metrics, controller state AND history
+            self._fc_slots: SlotTable | None = None
+            fc_slots = self.monitor.slots
         else:
             self.monitor = DictMonitor()
             self._cols = None
+            # the reference plane has no slot table; the history keeps
+            # its own (acquire/release mirrors the registry exactly)
+            self._fc_slots = SlotTable()
+            fc_slots = self._fc_slots
+        self.scaling_policy = scaling_policy
+        self.hybrid_vr_band = hybrid_vr_band
+        self.forecast = ForecastEngine(fc_slots, forecaster, forecast_window)
         self.policy = policy
         self.weights = weights
         self.actuator = actuator or NullActuator()
@@ -239,6 +270,7 @@ class DyverseController:
         if self._cols is not None:
             self.monitor.register(spec.name)        # acquires the slot
             slot = self.monitor.slots.index[spec.name]
+            self.forecast.born(slot)                # fresh history column
             st: TenantState = _SlotState(spec, self._next_ordinal, quota,
                                          cols=self._cols, slot=slot)
             c = self._cols
@@ -261,6 +293,7 @@ class DyverseController:
                              quota=quota, age=hist["age"],
                              loyalty=hist["loyalty"])
             self.monitor.register(spec.name)
+            self.forecast.born(self._fc_slots.acquire(spec.name))
         self._next_ordinal += 1
         hist["loyalty"] += 1  # Loyalty_s: used the service
         self.registry[spec.name] = st
@@ -338,12 +371,23 @@ class DyverseController:
         """Procedure 1: one dynamic vertical scaling round, O(N)."""
         report = RoundReport(policy=self.policy)
         metrics = self.monitor.roll_round()
+        # the closed round joins the forecast history on EVERY policy —
+        # recording is deterministic numpy on Monitor-held values (no
+        # RNG, no actions), so the reactive path stays bitwise-identical
+        # to the pre-forecast controller (neutrality pins). Its cost is
+        # accounted as forecast overhead (prediction time joins it in
+        # the proactive/hybrid round).
+        t0 = time.perf_counter()
+        self._record_history()
+        report.forecast_s = time.perf_counter() - t0
         if self.policy == "none":  # no dynamic vertical scaling (baseline)
             return report
         report.priority_update_s = self.update_priorities()
 
         t0 = time.perf_counter()
-        if self._cols is not None:
+        if self.scaling_policy != "reactive":
+            self._scaling_round_forecast(metrics, report)
+        elif self._cols is not None:
             self._scaling_round_array(report)
         else:
             self._scaling_round_reference(metrics, report)
@@ -351,6 +395,161 @@ class DyverseController:
         self.rounds_run += 1
         self.pool.check_invariants()
         return report
+
+    # ---- forecast history + proactive/hybrid scaling --------------------
+    def _record_history(self) -> None:
+        """Append the just-closed round (requests, VR_s, aL_s, allocated
+        uR) to the forecast ring. Both planes record the identical
+        float64 divisions the RoundMetrics properties perform, so their
+        histories — and therefore their forecasts — match bitwise."""
+        fc = self.forecast
+        if self._cols is not None:
+            prev = self.monitor.prev_columns()
+            req = prev.requests.astype(np.float64)
+            has = prev.requests > 0
+            vr = np.zeros(req.size)
+            np.divide(prev.violations.astype(np.float64), req, out=vr,
+                      where=has)
+            aL = np.zeros(req.size)
+            np.divide(prev.lat_sum, req, out=aL, where=has)
+            fc.observe(req, vr, aL, self._cols.units.astype(np.float64))
+        else:
+            cap = self._fc_slots.capacity
+            req = np.zeros(cap)
+            vr = np.zeros(cap)
+            aL = np.zeros(cap)
+            units = np.zeros(cap)
+            index = self._fc_slots.index
+            for name in self.registry:
+                i = index[name]
+                m = self.monitor.prev(name)
+                req[i] = m.requests
+                vr[i] = m.violation_rate
+                aL[i] = m.avg_latency
+                units[i] = self.pool.units(name)
+            fc.observe(req, vr, aL, units)
+
+    def _history_index(self, names: list[str]) -> np.ndarray:
+        """Slot ids of the registry tenants in the forecast history."""
+        if self._fc_slots is not None:
+            index = self._fc_slots.index
+            return np.fromiter((index[n] for n in names), np.intp,
+                               len(names))
+        return np.fromiter((st._slot for st in self.registry.values()),
+                           np.intp, len(names))
+
+    def _scaling_round_forecast(self, metrics, report: RoundReport) -> None:
+        """Procedure 1 under ``scaling_policy="proactive"|"hybrid"``:
+        one shared implementation for both control planes (identical
+        forecasts + identical walk → identical action streams).
+
+        ``proactive`` classifies each tenant from BOTH its realised
+        metrics and its FORECAST next-round metrics (aL̂_s vs the SLO)
+        and acts on whichever is more urgent:
+
+        * realised violation → the paper's Procedure 2 unchanged
+          (eviction cascade included), sized aR_s = R_s · max(VR_s,
+          VR̂_s) — a forecast can add urgency to a real violation but
+          never discount it;
+        * violation only PREDICTED → pre-scale before it lands, sized
+          aR_s = R_s · VR̂_s, drawing from free units only — never
+          evictions. That is the headroom cap keeping total allocation
+          inside the same budget reactive scaling works with: a wrong
+          forecast can cost spare headroom, never another tenant's
+          session;
+        * a predicted violation (or predicted hold band) also vetoes the
+          scale-down a purely reactive round would take, so units are
+          not drained right before a forecast burst.
+
+        With the ``last_value`` forecaster the predicted metrics equal
+        the realised ones and every decision collapses to the reactive
+        classification — the baseline the better forecasters improve on.
+
+        ``hybrid`` falls back to the PURE reactive branch for any tenant
+        whose smoothed forecast error exceeds ``hybrid_vr_band``, and
+        everywhere while the history is still empty."""
+        reg = self.registry
+        if not reg:
+            return
+        fc = self.forecast
+        names = list(reg)
+        n = len(names)
+        t0 = time.perf_counter()
+        idx = self._history_index(names)
+        # depth ≥ 1 always: run_round records the closed round before
+        # scaling, so even the first round predicts from a one-round
+        # window (every forecaster degenerates to ~last_value there)
+        frame = fc.predict(idx)
+        if self.scaling_policy == "hybrid":
+            fallback = fc.err_vr[idx] > self.hybrid_vr_band
+            if fc.scored_rounds < 1:
+                fallback[:] = True   # no prediction scored → no error signal
+        else:
+            fallback = np.zeros(n, bool)
+        report.forecast_s += time.perf_counter() - t0
+        pos = {name: j for j, name in enumerate(names)}
+        fall_l = fallback.tolist()
+        req_hat = frame.requests.tolist()
+        vr_hat = frame.vr.tolist()
+        aL_hat = frame.avg_latency.tolist()
+        order = sorted(reg, key=lambda nm: reg[nm].priority, reverse=True)
+        for name in order:
+            if name not in reg:                 # evicted earlier this round
+                continue
+            st = reg[name]
+            if not st.active or not self.network_ok(name):
+                self._terminate(name, report, reason="network/inactive")
+                continue
+            j = pos[name]
+            L = st.spec.slo_latency
+            if fall_l[j]:
+                m = metrics.get(name)
+                if m is None:
+                    continue
+                aL = m.avg_latency
+                if m.requests and aL > L:
+                    st.last_vr = m.violation_rate
+                    self._scale_up(name, st, m.violation_rate, report)
+                elif m.requests and aL > st.spec.down_threshold * L:
+                    if st.spec.donation:
+                        self._scale_down(name, st, report, donated=True)
+                    else:
+                        report.actions.append(RoundAction(
+                            name, Decision.NONE, priority=st.priority))
+                else:
+                    self._scale_down(name, st, report, donated=False)
+            else:
+                m = metrics.get(name)
+                dthr = st.spec.down_threshold * L
+                r_up = bool(m is not None and m.requests
+                            and m.avg_latency > L)
+                r_band = bool(m is not None and m.requests and not r_up
+                              and m.avg_latency > dthr)
+                expects = req_hat[j] > 0.5      # forecast sees traffic
+                f_up = expects and aL_hat[j] > L
+                f_band = expects and not f_up and aL_hat[j] > dthr
+                if r_up or f_up:
+                    vr = max(m.violation_rate if r_up else 0.0,
+                             vr_hat[j] if f_up else 0.0)
+                    st.last_vr = vr
+                    self._scale_up(name, st, vr, report, evict=r_up)
+                elif r_band or f_band:
+                    if st.spec.donation:
+                        self._scale_down(name, st, report, donated=True)
+                    else:
+                        report.actions.append(RoundAction(
+                            name, Decision.NONE, priority=st.priority))
+                else:
+                    self._scale_down(name, st, report, donated=False)
+
+    def _sync_units_col(self, name: str, st: TenantState) -> None:
+        """Array plane: keep the slot-aligned units column exact after a
+        pool mutation made outside the vectorised round (the batched
+        engine's FleetStepper reads it for the latency model). No-op on
+        the reference plane, and never reached from the array plane's
+        own reactive round (which maintains the column inline)."""
+        if self._cols is not None:
+            self._cols.units[st._slot] = self.pool.units(name)
 
     # ---- array control plane -------------------------------------------
     def _scaling_round_array(self, report: RoundReport) -> None:
@@ -564,12 +763,16 @@ class DyverseController:
                 self._scale_down(name, st, report, donated=False)
 
     def _scale_up(self, name: str, st: TenantState, vr: float,
-                  report: RoundReport) -> None:
-        """Procedure 2, scaleup branch: aR_s = R_s · VR_s (≥1 unit)."""
+                  report: RoundReport, *, evict: bool = True) -> None:
+        """Procedure 2, scaleup branch: aR_s = R_s · VR_s (≥1 unit).
+        Shared by the reference reactive round and the forecast round —
+        ``evict=False`` is the proactive headroom cap: a scale-up
+        justified only by a forecast grants from free units and never
+        starts the eviction cascade."""
         r_units = self.pool.units(name)
         want = max(1, round(r_units * vr))
         freed_for: str | None = None
-        while self.pool.free_units < want:
+        while evict and self.pool.free_units < want:
             victim = self._lowest_priority_victim(exclude=name)
             # paper Procedure 2 line 10: stop at "index of s" — only tenants
             # with strictly lower priority may be evicted
@@ -583,13 +786,16 @@ class DyverseController:
             self.pool.grow(name, grant)
             st.quota = self.pool.quota(name)
             st.scale_count += 1              # Scale_s penalty accounting
+            self._sync_units_col(name, st)
             self.actuator.apply_quota(name, st.quota)
         report.actions.append(RoundAction(name, Decision.SCALE_UP, grant,
                                           st.priority, terminated_for=freed_for))
 
     def _scale_down(self, name: str, st: TenantState, report: RoundReport,
                     *, donated: bool) -> None:
-        """Procedure 2, scaledown branch: remove one uR (never below floor)."""
+        """Procedure 2, scaledown branch: remove one uR (never below
+        floor). Shared by the reference reactive round and the forecast
+        round."""
         if self.pool.units(name) <= st.spec.min_units:
             report.actions.append(RoundAction(name, Decision.NONE,
                                               priority=st.priority))
@@ -600,6 +806,7 @@ class DyverseController:
             st.reward_count += 1             # Reward_s credit; donation scaling is NOT penalised
         else:
             st.scale_count += 1              # Scale_s penalty accounting
+        self._sync_units_col(name, st)
         self.actuator.apply_quota(name, st.quota)
         report.actions.append(RoundAction(name, Decision.SCALE_DOWN, 1,
                                           st.priority))
@@ -620,6 +827,7 @@ class DyverseController:
         if isinstance(st, _SlotState):
             st._detach()                     # before the slot is freed
         self.monitor.forget(name)
+        self._release_history_slot(name)
         hist = self._history.setdefault(name, {"age": 0, "loyalty": 0})
         hist["age"] += 1                     # future re-admission gets priority
         report.terminated.append(name)
@@ -643,7 +851,18 @@ class DyverseController:
         if isinstance(st, _SlotState):
             st._detach()                 # before the slot is freed
         self.monitor.forget(name)
+        self._release_history_slot(name)
         return st
+
+    def _release_history_slot(self, name: str) -> None:
+        """Reference plane only: the forecast history keeps its own slot
+        table, released in lockstep with the registry (the array plane
+        shares the Monitor's table — ``forecast.born`` at the slot's
+        next acquire re-initialises it there)."""
+        if self._fc_slots is not None:
+            slot = self._fc_slots.release(name)
+            if slot is not None:
+                self.forecast.born(slot)     # reused slots start clean
 
     # ------------------------------------------------------------ views
     @property

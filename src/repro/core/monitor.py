@@ -261,6 +261,15 @@ class Monitor:
         self._cur.zero()
         return RoundView(self)
 
+    def prev_columns(self) -> _MetricCols:
+        """The closed round's slot-aligned metric columns — the bulk
+        read-side API for consumers that reduce over the whole fleet at
+        once (the controller's vectorised round classification and the
+        forecast history recorder). Callers must treat the buffers as
+        read-only; they are reused as the current round after the next
+        ``roll_round``."""
+        return self._prev
+
     def prev(self, tenant: str) -> RoundMetrics:
         slot = self.slots.index.get(tenant)
         return self._prev.metrics(slot) if slot is not None else RoundMetrics()

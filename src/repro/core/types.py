@@ -115,4 +115,6 @@ class RoundReport:
     actions: list[RoundAction] = field(default_factory=list)
     priority_update_s: float = 0.0      # overhead: priority management
     scaling_s: float = 0.0              # overhead: scaling mechanism
+    forecast_s: float = 0.0             # overhead: forecast prediction
+    #                                     (proactive/hybrid scaling only)
     terminated: list[str] = field(default_factory=list)

@@ -14,3 +14,5 @@ from repro.sim.scenario import (SCENARIOS, FaultSpec, FleetSpec,  # noqa: F401
                                 ScenarioResult, TenantClassSpec,
                                 TopologySpec, register_scenario,
                                 run_scenario)
+from repro.core.forecast import (FORECASTERS,  # noqa: F401  (re-export)
+                                 SCALING_POLICIES)

@@ -84,6 +84,14 @@ class SimConfig:
     #                                   scale (fast, NOT bitwise-guaranteed)
     control_plane: str = "array"      # "array" | "reference" controller path
     rng_workers: int = 2              # batched engine: jitter-draw pool size
+    # ScalingPolicy seam (repro.core.forecast): "reactive" keeps the
+    # paper's Procedure-2 path bitwise-identical; "proactive" scales on
+    # the forecast before violations land; "hybrid" falls back to
+    # reactive wherever the forecast error exceeds hybrid_vr_band
+    scaling_policy: str = "reactive"  # "reactive" | "proactive" | "hybrid"
+    forecaster: str = "ewma"          # FORECASTERS name (or instance)
+    forecast_window: int = 16         # RoundHistory ring depth (rounds)
+    hybrid_vr_band: float = 0.15      # smoothed |VR̂−VR| reactive-fallback band
     # this node's Cloud link: Cloud-serviced requests pay this round-trip
     # (per-node WAN heterogeneity — TopologySpec threads it through here)
     wan_extra_latency: float = WAN_EXTRA_LATENCY
@@ -102,6 +110,8 @@ class SimResult:
     slos: np.ndarray = field(default_factory=lambda: np.empty(0))
     overhead_priority_s: list[float] = field(default_factory=list)
     overhead_scaling_s: list[float] = field(default_factory=list)
+    # forecast-prediction wall per round (zero under reactive scaling)
+    overhead_forecast_s: list[float] = field(default_factory=list)
     terminated: list[str] = field(default_factory=list)
     # per-round Procedure-1 action streams (RoundReport.actions), in round
     # order — the scenario/placement equivalence tests pin these bitwise
@@ -112,7 +122,8 @@ class SimResult:
 
     @property
     def mean_overhead_per_server_s(self) -> float:
-        tot = sum(self.overhead_priority_s) + sum(self.overhead_scaling_s)
+        tot = (sum(self.overhead_priority_s) + sum(self.overhead_scaling_s)
+               + sum(self.overhead_forecast_s))
         n = max(len(self.overhead_priority_s), 1)
         return tot / n
 
@@ -175,6 +186,10 @@ class EdgeNodeSim:
             actuator=_SimActuator(self),
             normalize_factors=cfg.normalize_factors,
             control_plane=cfg.control_plane,
+            scaling_policy=cfg.scaling_policy,
+            forecaster=cfg.forecaster,
+            forecast_window=cfg.forecast_window,
+            hybrid_vr_band=cfg.hybrid_vr_band,
         )
         # run-state accumulators (chunk API)
         self._result = SimResult(policy=cfg.policy, violation_rate=0.0)
@@ -347,6 +362,7 @@ class EdgeNodeSim:
         report = self.ctrl.run_round()
         self._result.overhead_priority_s.append(report.priority_update_s)
         self._result.overhead_scaling_s.append(report.scaling_s)
+        self._result.overhead_forecast_s.append(report.forecast_s)
         self._result.terminated.extend(report.terminated)
         self._result.round_actions.append(report.actions)
         return report

@@ -151,15 +151,23 @@ class FederationConfig:
     engine: str = "vectorized"
     control_plane: str = "array"       # "array" | "reference" (per node)
     rng_workers: int = 2               # batched engine: jitter-draw pool
+    # ScalingPolicy seam (repro.core.forecast), applied on every node
+    scaling_policy: str = "reactive"   # "reactive"|"proactive"|"hybrid"
+    forecaster: str = "ewma"           # FORECASTERS name
+    forecast_window: int = 16
+    hybrid_vr_band: float = 0.15
     placement: str | PlacementPolicy = "least_loaded"
     # per-node node↔Cloud WAN round-trip (heterogeneous links); None →
     # the homogeneous WAN_EXTRA_LATENCY default on every node
     node_wan_latency_s: list[float] | None = None
     node_unit_price: list[float] | None = None   # price-aware placement
-    # scheduled whole-node failures: (second, node name); each fires at
-    # the first chunk boundary ≥ its second and re-places every tenant
-    # the node hosts on the surviving siblings (or the Cloud tier)
-    node_failures: list[tuple[int, str]] = field(default_factory=list)
+    # scheduled node failures: (second, node name | list of node names);
+    # each fires at the first chunk boundary ≥ its second. A multi-name
+    # entry is a CORRELATED failure (whole-rack outage): every listed
+    # node is marked dead before any tenant re-places, so refugees only
+    # land on true survivors (or the Cloud tier)
+    node_failures: list[tuple[int, "str | tuple[str, ...] | list[str]"]] \
+        = field(default_factory=list)
     seed: int = 0
 
     def _per_node(self, values, i: int, default):
@@ -186,6 +194,10 @@ class FederationConfig:
             engine=self.engine,
             control_plane=self.control_plane,
             rng_workers=self.rng_workers,
+            scaling_policy=self.scaling_policy,
+            forecaster=self.forecaster,
+            forecast_window=self.forecast_window,
+            hybrid_vr_band=self.hybrid_vr_band,
             wan_extra_latency=self._per_node(self.node_wan_latency_s, i,
                                              WAN_EXTRA_LATENCY),
             unit_price=self._per_node(self.node_unit_price, i, 1.0),
@@ -236,10 +248,17 @@ class EdgeFederation:
         self.replaced: list[str] = []
         self.failed: set[str] = set()
         node_names = {n.name for n in self.nodes}
-        for ft, fname in cfg.node_failures:
-            if fname not in node_names:
-                raise ValueError(f"node_failures names unknown node "
-                                 f"{fname!r} (have {sorted(node_names)})")
+        normalized: list[tuple[int, tuple[str, ...]]] = []
+        for ft, fnodes in cfg.node_failures:
+            # one event may name several nodes (correlated/rack outage)
+            names = ((fnodes,) if isinstance(fnodes, str)
+                     else tuple(fnodes))
+            if not names:
+                raise ValueError(f"node failure at t={ft} names no nodes")
+            for fname in names:
+                if fname not in node_names:
+                    raise ValueError(f"node_failures names unknown node "
+                                     f"{fname!r} (have {sorted(node_names)})")
             if not 0 < ft:
                 raise ValueError(f"node failure at t={ft} must be > 0")
             # boundaries are the multiples of round_interval (plus the
@@ -252,10 +271,12 @@ class EdgeFederation:
                     f"node failure at t={ft} would never fire: its chunk "
                     f"boundary {boundary} is not before "
                     f"duration_s={cfg.duration_s}")
-        if len({f[1] for f in cfg.node_failures}) >= cfg.n_nodes:
+            normalized.append((ft, names))
+        if len({nm for _, names in normalized for nm in names}) \
+                >= cfg.n_nodes:
             raise ValueError("node_failures would kill every node")
         # schedule sorted by time; each fires at the first boundary ≥ t
-        self._pending_failures = sorted(cfg.node_failures)
+        self._pending_failures = sorted(normalized)
         names = [wl.name for wl in workloads]
         if len(set(names)) != len(names):
             raise ValueError("duplicate tenant names in federation fleet")
@@ -359,7 +380,7 @@ class EdgeFederation:
         (donation/premium intact) and are NOT charged Age_s
         (``DyverseController.release_tenant``). The dead node's
         already-served requests still count in Eq. 1."""
-        self.failed.add(node.name)
+        self.failed.add(node.name)       # idempotent under batched faults
         refugees = []
         for name in list(node.workloads):
             age = node.ctrl.prior_age(name)
@@ -387,10 +408,21 @@ class EdgeFederation:
                         kind="failover")
 
     def _apply_failures(self, t1: int) -> None:
+        """Fire every scheduled failure due at this boundary as ONE
+        correlated batch: all dying nodes are marked dead before any
+        tenant re-places, so a rack outage's refugees only ever land on
+        true survivors — never on a sibling that is failing in the same
+        event."""
+        due: list[str] = []
         while self._pending_failures and self._pending_failures[0][0] <= t1:
-            _, fname = self._pending_failures.pop(0)
-            if fname in self.failed:
-                continue            # duplicate schedule entry: already dead
+            _, fnames = self._pending_failures.pop(0)
+            for fname in fnames:
+                if fname not in self.failed and fname not in due:
+                    due.append(fname)   # duplicate entries: already dead
+        if not due:
+            return
+        self.failed.update(due)
+        for fname in due:
             node = next(n for n in self.nodes if n.name == fname)
             self._fail_node(node, t1)
 

@@ -30,8 +30,24 @@ Schema
     ``placement``       a :class:`~repro.sim.federation.PlacementPolicy`
                         name — ``least_loaded`` | ``locality`` |
                         ``price_aware``.
-    ``policies``        the scaling policies swept per run (default: the
-                        ``none`` baseline + the four priority policies).
+    ``policies``        the priority policies swept per run (default:
+                        the ``none`` baseline + the four priority
+                        policies).
+    ``scaling_policies``  the :mod:`repro.core.forecast` ScalingPolicy
+                        seam swept per run — ``reactive`` (Procedure 2
+                        unchanged, the default), ``proactive``
+                        (forecast-driven, scales before violations
+                        land) and/or ``hybrid`` (reactive fallback
+                        wherever forecast error exceeds
+                        ``hybrid_vr_band``). Every combination runs the
+                        SAME fleet on the SAME topology, so the sweep
+                        compares policies at an equal resource budget;
+                        multi-entry sweeps key their outcomes as
+                        ``"<policy>/<scaling>"``.
+    ``forecaster``      the forecaster the proactive/hybrid runs use —
+                        a :data:`repro.core.forecast.FORECASTERS` name:
+                        ``last_value`` | ``ewma`` | ``linear_trend`` |
+                        ``seasonal_naive``.
     plus the engine / control-plane / cadence / pricing / seed knobs that
     previously had to be hand-wired into ``FederationConfig`` tuples.
 
@@ -54,7 +70,8 @@ True
 
 Named paper scenarios live in the :data:`SCENARIOS` registry
 (``paper_game_32``, ``paper_face_detection``, ``mixed_fleet``,
-``hetero_one_big_many_small``, ``node_failure_midrun``) and can be run
+``hetero_one_big_many_small``, ``proactive_game_32``,
+``proactive_face_detection``, ``node_failure_midrun``) and can be run
 from the command line — the CI smoke runs every entry::
 
     PYTHONPATH=src python -m repro.sim.scenario --quick
@@ -187,9 +204,20 @@ class TopologySpec:
 
 @dataclass(frozen=True)
 class NodeFailure:
+    """One fault event. ``node`` names a single node (``"edge1"``) or a
+    tuple of nodes — a CORRELATED failure (whole-rack outage): every
+    listed node dies at the same chunk boundary and is excluded from
+    placement before any of their tenants re-place, so refugees only
+    land on true survivors (or the Cloud tier)."""
+
     t: int                              # simulated second (fires at the
     #                                     first chunk boundary ≥ t)
-    node: str                           # e.g. "edge1"
+    node: str | tuple[str, ...]         # e.g. "edge1" / ("edge1", "edge2")
+
+    @property
+    def node_names(self) -> tuple[str, ...]:
+        return (self.node,) if isinstance(self.node, str) \
+            else tuple(self.node)
 
 
 @dataclass(frozen=True)
@@ -207,6 +235,15 @@ class Scenario:
     faults: FaultSpec = FaultSpec()
     placement: str = "least_loaded"
     policies: tuple[str, ...] = SWEEP_POLICIES
+    # ScalingPolicy seam (repro.core.forecast): each run sweeps the
+    # cross product policies × scaling_policies at the same budget —
+    # "reactive" is Procedure 2 unchanged, "proactive" scales on the
+    # forecast before violations land, "hybrid" falls back to reactive
+    # wherever the forecast error exceeds hybrid_vr_band
+    scaling_policies: tuple[str, ...] = ("reactive",)
+    forecaster: str = "ewma"            # FORECASTERS registry name
+    forecast_window: int = 16
+    hybrid_vr_band: float = 0.15
     duration_s: int = 1200
     round_interval: int = 300
     default_units: int = 16
@@ -221,6 +258,7 @@ class Scenario:
     description: str = ""
 
     def validate(self) -> None:
+        from repro.core.forecast import FORECASTERS, SCALING_POLICIES
         if self.fleet.size <= 0:
             raise ValueError(f"scenario {self.name!r} has an empty fleet")
         if self.placement not in PLACEMENTS:
@@ -229,18 +267,30 @@ class Scenario:
         bad = [p for p in self.policies if p not in SWEEP_POLICIES]
         if bad:
             raise ValueError(f"unknown policies {bad}; have {SWEEP_POLICIES}")
+        bad = [p for p in self.scaling_policies if p not in SCALING_POLICIES]
+        if bad:
+            raise ValueError(f"unknown scaling policies {bad}; "
+                             f"have {SCALING_POLICIES}")
+        if self.forecaster not in FORECASTERS:
+            raise ValueError(f"forecaster {self.forecaster!r} not in "
+                             f"{sorted(FORECASTERS)}")
         if self.engine not in ENGINES:
             raise ValueError(f"engine {self.engine!r} not in {ENGINES}")
         node_names = {f"edge{i}" for i in range(self.topology.n_nodes)}
         for f in self.faults.node_failures:
-            if f.node not in node_names:
-                raise ValueError(f"fault names unknown node {f.node!r}")
+            for nm in f.node_names:
+                if nm not in node_names:
+                    raise ValueError(f"fault names unknown node {nm!r}")
 
-    def federation_config(self, policy: str) -> FederationConfig:
-        """Compile this spec (for one scaling policy) onto the existing
-        federation machinery. A default least-loaded/homogeneous
-        scenario produces exactly the config the pre-scenario
-        experiments hand-wired — that is the bitwise contract."""
+    def federation_config(self, policy: str,
+                          scaling_policy: str | None = None
+                          ) -> FederationConfig:
+        """Compile this spec (for one priority policy × scaling policy)
+        onto the existing federation machinery. A default least-loaded/
+        homogeneous/reactive scenario produces exactly the config the
+        pre-scenario experiments hand-wired — that is the bitwise
+        contract. ``scaling_policy=None`` takes the spec's first entry
+        (``"reactive"`` unless the scenario sweeps forecasts)."""
         topo = self.topology
         cap, caps = topo.resolve_capacity(self.fleet.size)
         return FederationConfig(
@@ -258,6 +308,11 @@ class Scenario:
             engine=self.engine,
             control_plane=self.control_plane,
             rng_workers=self.rng_workers,
+            scaling_policy=(scaling_policy if scaling_policy is not None
+                            else self.scaling_policies[0]),
+            forecaster=self.forecaster,
+            forecast_window=self.forecast_window,
+            hybrid_vr_band=self.hybrid_vr_band,
             placement=self.placement,
             node_wan_latency_s=topo._per_node_list(topo.wan_latency_s,
                                                    "wan_latency_s"),
@@ -299,6 +354,7 @@ class PolicyOutcome:
     replaced: int                            # node→node migrations
     cloud: int                               # tenants that ended on Cloud
     wall_s: float
+    scaling_policy: str = "reactive"         # reactive|proactive|hybrid
 
 
 @dataclass
@@ -306,7 +362,10 @@ class ScenarioResult:
     """Everything :func:`run_scenario` produces: the per-policy summary
     rows (``outcomes``) plus the full per-policy
     :class:`~repro.sim.federation.FederationResult` (``results``) for
-    anything the summary doesn't carry."""
+    anything the summary doesn't carry. When a scenario sweeps more than
+    one scaling policy, the dict keys become ``"<policy>/<scaling>"``
+    (e.g. ``"sdps/proactive"``); with the default single
+    ``("reactive",)`` sweep they stay the bare policy names."""
 
     name: str
     scenario: Scenario
@@ -333,25 +392,27 @@ class ScenarioResult:
             lines.append("faults: " + ", ".join(
                 f"{f.node}@{f.t}s" for f in sc.faults.node_failures))
         band_hdr = "  ".join(f"{b[:11]:>11}" for b, _, _ in BANDS)
+        pw = max(8, *(len(k) for k in self.outcomes)) if self.outcomes else 8
         lines.append(
-            f"{'policy':<8} {'fed-VR%':>7}  "
+            f"{'policy':<{pw}} {'fed-VR%':>7}  "
             + "  ".join(f"{n:>7}" for n in node_names)
             + f"  {band_hdr}  {'repl':>5} {'cloud':>5} {'max-ovh':>8}"
             f" {'wall':>7}")
-        for policy, oc in self.outcomes.items():
+        for key, oc in self.outcomes.items():
             per_node = "  ".join(
                 f"{oc.per_node_vr.get(n, 0.0) * 100:6.1f}%"
                 for n in node_names)
             bands = "  ".join(f"{oc.band_fractions[b] * 100:10.1f}%"
                               for b, _, _ in BANDS)
-            ovh = ("      —" if policy == "none"
+            ovh = ("      —" if oc.policy == "none"
                    else f"{oc.max_round_overhead_s * 1e3:6.2f}ms")
             lines.append(
-                f"{policy:<8} {oc.violation_rate * 100:6.1f}   {per_node}"
+                f"{key:<{pw}} {oc.violation_rate * 100:6.1f}   {per_node}"
                 f"  {bands}  {oc.replaced:5d} {oc.cloud:5d} {ovh:>8}"
                 f" {oc.wall_s:6.2f}s")
         worst = max((oc.max_round_overhead_s
-                     for p, oc in self.outcomes.items() if p != "none"),
+                     for oc in self.outcomes.values()
+                     if oc.policy != "none"),
                     default=0.0)
         if worst:
             ok = "ok (paper: sub-second)" if worst < 1.0 else "VIOLATED"
@@ -382,9 +443,12 @@ def _band_fractions(res: FederationResult) -> dict[str, float]:
 
 def run_scenario(scenario: Scenario | str, *,
                  policies: tuple[str, ...] | None = None,
+                 scaling_policies: tuple[str, ...] | None = None,
                  quick: bool = False) -> ScenarioResult:
     """Compile and run a :class:`Scenario` (or a :data:`SCENARIOS` name)
-    across its policies; returns the uniform :class:`ScenarioResult`."""
+    across its policies × scaling policies (every combination runs the
+    SAME fleet on the SAME topology — an equal-resource-budget sweep);
+    returns the uniform :class:`ScenarioResult`."""
     if isinstance(scenario, str):
         try:
             scenario = SCENARIOS[scenario]
@@ -395,25 +459,33 @@ def run_scenario(scenario: Scenario | str, *,
         scenario = scenario.quick()
     scenario.validate()
     out = ScenarioResult(name=scenario.name, scenario=scenario)
+    spols = scaling_policies or scenario.scaling_policies
     for policy in (policies or scenario.policies):
-        fleet = scenario.fleet.build()
-        cfg = scenario.federation_config(policy)
-        t0 = time.perf_counter()
-        res = EdgeFederation(fleet, cfg).run()
-        wall = time.perf_counter() - t0
-        over = res.mean_round_overhead_s
-        out.results[policy] = res
-        out.outcomes[policy] = PolicyOutcome(
-            policy=policy,
-            violation_rate=res.violation_rate,
-            per_node_vr=res.per_node_vr,
-            band_fractions=_band_fractions(res),
-            mean_round_overhead_s=over,
-            max_round_overhead_s=max(over.values(), default=0.0),
-            replaced=len(res.replaced),
-            cloud=len(res.cloud),
-            wall_s=wall,
-        )
+        # the "none" baseline runs no scaling rounds at all — sweeping
+        # scaling policies over it would repeat the identical run
+        pol_spols = spols if policy != "none" else spols[:1]
+        for spol in pol_spols:
+            key = (policy if len(spols) == 1 or policy == "none"
+                   else f"{policy}/{spol}")
+            fleet = scenario.fleet.build()
+            cfg = scenario.federation_config(policy, spol)
+            t0 = time.perf_counter()
+            res = EdgeFederation(fleet, cfg).run()
+            wall = time.perf_counter() - t0
+            over = res.mean_round_overhead_s
+            out.results[key] = res
+            out.outcomes[key] = PolicyOutcome(
+                policy=policy,
+                violation_rate=res.violation_rate,
+                per_node_vr=res.per_node_vr,
+                band_fractions=_band_fractions(res),
+                mean_round_overhead_s=over,
+                max_round_overhead_s=max(over.values(), default=0.0),
+                replaced=len(res.replaced),
+                cloud=len(res.cloud),
+                wall_s=wall,
+                scaling_policy=spol,
+            )
     return out
 
 
@@ -471,6 +543,37 @@ register_scenario(Scenario(
                           node_capacities=(300, 84, 84, 84),
                           unit_price=(2.0, 1.0, 1.0, 1.0)),
     placement="price_aware",
+))
+
+register_scenario(Scenario(
+    name="proactive_game_32",
+    description="Forecast-driven scaling on the paper game fleet: "
+                "reactive vs proactive vs hybrid (sdps) at the same "
+                "budget; 60 s rounds so the 300 s burst cycle spans 5 "
+                "rounds and the seasonal_naive forecaster pre-scales "
+                "into each peak it has already seen once.",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 32),)),
+    topology=TopologySpec(n_nodes=4, headroom=16),
+    policies=("sdps",),
+    scaling_policies=("reactive", "proactive", "hybrid"),
+    forecaster="seasonal_naive",
+    round_interval=60,
+))
+
+register_scenario(Scenario(
+    name="proactive_face_detection",
+    description="Forecast-driven scaling on the paper streaming fleet "
+                "(0.1-1 fps Face Detection): reactive vs proactive vs "
+                "hybrid (sdps) at the same budget, 60 s rounds — here "
+                "seasonal_naive anticipates the controller's own "
+                "scale-down/scale-up limit cycle rather than the "
+                "(time-invariant) demand.",
+    fleet=FleetSpec(classes=(TenantClassSpec("stream", 32),)),
+    topology=TopologySpec(n_nodes=4, headroom=16),
+    policies=("sdps",),
+    scaling_policies=("reactive", "proactive", "hybrid"),
+    forecaster="seasonal_naive",
+    round_interval=60,
 ))
 
 register_scenario(Scenario(

@@ -313,6 +313,87 @@ def test_mid_round_active_flip_matches_reference():
     assert streams["array"] == streams["reference"]
 
 
+# --------------------------------------------- pre-PR reactive neutrality
+# sha256 fingerprints captured at the pre-forecast HEAD (PR 4): with the
+# default scaling_policy="reactive", action streams, placements,
+# latencies, per-minute timelines and terminations must stay
+# bitwise-identical across ALL engines and BOTH control planes even
+# though every round now records forecast history.
+GOLDEN_NODE = "04006426601cf49bd77bcfa21469f0ad541f1792754ab12c19f3e481a81e0cbe"
+GOLDEN_FED = "69646272959160bee720b2437bfd06daffd3398c44e4a9452a11a6cd2074bcbb"
+
+
+def _actions_blob(round_actions):
+    out = []
+    for actions in round_actions:
+        for a in actions:
+            out.append(f"{a.tenant}|{a.decision.value}|{a.units}|"
+                       f"{a.priority.hex()}|{a.terminated_for}")
+        out.append(";")
+    return "\n".join(out)
+
+
+def _node_fingerprint(engine, control_plane):
+    import hashlib
+    rng = np.random.default_rng(42)
+    cfg = SimConfig(policy="sdps", duration_s=240, round_interval=60,
+                    capacity_units=int(490 * 16 / 32), seed=7,
+                    engine=engine, control_plane=control_plane)
+    res = EdgeNodeSim(make_game_fleet(16, rng), cfg).run()
+    h = hashlib.sha256()
+    h.update(res.violation_rate.hex().encode())
+    h.update(",".join(v.hex() for v in res.per_minute_vr).encode())
+    h.update(_actions_blob(res.round_actions).encode())
+    h.update(np.ascontiguousarray(res.latencies).tobytes())
+    h.update(",".join(res.terminated).encode())
+    return h.hexdigest()
+
+
+def _fed_fingerprint(engine, control_plane):
+    import hashlib
+    rng = np.random.default_rng(42)
+    fleet = make_game_fleet(24, rng) + make_stream_fleet(8, rng)
+    cfg = FederationConfig(n_nodes=4, duration_s=480, round_interval=60,
+                           capacity_units=100, policy="sdps", seed=1,
+                           engine=engine, control_plane=control_plane)
+    res = EdgeFederation(fleet, cfg).run()
+    h = hashlib.sha256()
+    h.update(res.violation_rate.hex().encode())
+    for ev in res.placements:
+        h.update(f"{ev.t}|{ev.tenant}|{ev.node}|{ev.kind}|{ev.source}"
+                 .encode())
+    for name in sorted(res.node_results):
+        nr = res.node_results[name]
+        h.update(name.encode())
+        h.update(nr.violation_rate.hex().encode())
+        h.update(_actions_blob(nr.round_actions).encode())
+        h.update(np.ascontiguousarray(nr.latencies).tobytes())
+        h.update(",".join(nr.terminated).encode())
+    return h.hexdigest()
+
+
+@pytest.mark.parametrize("engine", ["scalar", "vectorized", "batched"])
+@pytest.mark.parametrize("control_plane", CONTROL_PLANES)
+def test_reactive_node_bitwise_identical_to_pre_pr_head(engine,
+                                                        control_plane):
+    """Single-node churn scenario pinned against the digest captured at
+    the pre-forecast HEAD: forecast-history recording must not perturb
+    any RNG stream, action order, latency or termination."""
+    assert _node_fingerprint(engine, control_plane) == GOLDEN_NODE
+
+
+@pytest.mark.parametrize("engine,control_plane",
+                         [("batched", "array"), ("batched", "reference"),
+                          ("vectorized", "array"),
+                          ("vectorized", "reference"),
+                          ("scalar", "array")])
+def test_reactive_federation_bitwise_identical_to_pre_pr_head(
+        engine, control_plane):
+    """Federation mixed-fleet churn scenario (re-placements included)
+    pinned against the pre-forecast HEAD digest."""
+    assert _fed_fingerprint(engine, control_plane) == GOLDEN_FED
+
+
 def test_monitor_roll_round_view_and_forget():
     """SoA Monitor API: roll_round's view materialises the closed round;
     forget clears a slot so reuse starts clean."""

@@ -341,6 +341,78 @@ def test_failure_config_validation():
         EdgeFederation([], _failure_cfg(node_failures=[(999, "edge1")]))
 
 
+def test_correlated_multinode_failure_replaces_on_true_survivors():
+    """A single fault event naming several nodes (rack outage): every
+    listed node dies at the same boundary and refugees only ever land on
+    the surviving nodes — never on a sibling failing in the same event
+    — or on the Cloud tier when the survivors are full."""
+    fleet = [game(f"g{i}") for i in range(12)]       # 3 per node
+    fed = EdgeFederation(fleet, FederationConfig(
+        n_nodes=4, capacity_units=96, duration_s=240, round_interval=60,
+        default_units=16, policy="sdps", seed=3,
+        node_failures=[(60, ["edge1", "edge2"])]))
+    doomed = set(fed.nodes[1].workloads) | set(fed.nodes[2].workloads)
+    assert len(doomed) == 6
+    res = fed.run()
+    assert res.failed_nodes == ["edge1", "edge2"]
+    for node in (fed.nodes[1], fed.nodes[2]):
+        assert not node.workloads and not node.ctrl.registry
+    fo = [e for e in res.placements if e.kind in ("failover", "cloud")
+          and e.source in ("edge1", "edge2")]
+    assert {e.tenant for e in fo} == doomed
+    # no refugee was placed on the co-failing sibling, even transiently:
+    # the survivors (96u = 6×16u each, 3 own tenants) absorb all six
+    assert all(e.kind == "failover" and e.node in ("edge0", "edge3")
+               for e in fo)
+    assert all(e.t == 60 for e in fo)
+
+
+def test_correlated_failure_batches_events_at_same_boundary():
+    """Two separate events due at the same chunk boundary fire as one
+    correlated batch: refugees of the first never land on the node the
+    second kills."""
+    fleet = [game(f"g{i}") for i in range(9)]
+    fed = EdgeFederation(fleet, _failure_cfg(
+        n_nodes=4, capacity_units=96,
+        node_failures=[(30, "edge1"), (60, "edge2")]))
+    res = fed.run()
+    assert res.failed_nodes == ["edge1", "edge2"]
+    moved = [e for e in res.placements if e.kind == "failover"]
+    assert moved and all(e.node in ("edge0", "edge3") for e in moved)
+
+
+def test_multinode_failure_validation():
+    with pytest.raises(ValueError, match="every node"):
+        EdgeFederation([], _failure_cfg(
+            node_failures=[(60, ["edge0", "edge1", "edge2"])]))
+    with pytest.raises(ValueError, match="unknown node"):
+        EdgeFederation([], _failure_cfg(
+            node_failures=[(60, ["edge1", "edge9"])]))
+    with pytest.raises(ValueError, match="names no nodes"):
+        EdgeFederation([], _failure_cfg(node_failures=[(60, [])]))
+
+
+def test_multinode_failure_through_scenario_spec():
+    """NodeFailure accepts a tuple of nodes; validation and quick()
+    rescaling handle it; the compiled run re-places the whole rack."""
+    sc = Scenario(
+        name="rack_outage",
+        fleet=FleetSpec(classes=(TenantClassSpec("game", 12),)),
+        topology=TopologySpec(n_nodes=4, headroom=48),
+        faults=FaultSpec((NodeFailure(t=600, node=("edge1", "edge2")),)),
+        duration_s=1200, round_interval=300, policies=("sdps",))
+    assert sc.faults.node_failures[0].node_names == ("edge1", "edge2")
+    q = sc.quick()
+    assert q.faults.node_failures[0].node_names == ("edge1", "edge2")
+    res = run_scenario(sc, quick=True).results["sdps"]
+    assert res.failed_nodes == ["edge1", "edge2"]
+    with pytest.raises(ValueError, match="unknown node"):
+        run_scenario(dataclasses.replace(
+            sc, faults=FaultSpec((NodeFailure(t=600,
+                                              node=("edge1", "edge7")),))),
+            quick=True)
+
+
 def test_duplicate_failure_entries_for_one_node_allowed():
     # two schedule entries for the same node must not trip the
     # "kills every node" guard: the second entry is a no-op
