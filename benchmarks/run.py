@@ -128,17 +128,32 @@ def main() -> None:
                 _csv(f"{r['figure']}/{r['workload']}/{r['policy']}/lowband",
                      0.0, f"{r['fraction'] * 100:.1f}% of requests in lowest band")
 
-    if not args.quick and want("serving"):
-        rows = serving_bench.actuation_latency()
-        results["actuation"] = rows
+    if want("serving"):
+        # the federated real-engine scenario runs even in --quick: it IS
+        # the health gate for the serving control loop (raises on a
+        # non-finite VR or zero Edge-completed requests)
+        rows = serving_bench.serving_federation()
+        results["serving_federation"] = rows
         for r in rows:
-            _csv("serving/actuation_round", r["ms"] * 1e3,
-                 f"priority={r['priority_ms']:.3f}ms scaling={r['scaling_ms']:.3f}ms")
-        rows = serving_bench.engine_throughput()
-        results["engine"] = rows
-        for r in rows:
-            _csv(f"serving/throughput/{r['tenants']}t", 0.0,
-                 f"{r['tokens_per_s']:.1f} tok/s")
+            _csv(f"serving/federation/{r['policy']}",
+                 r["wall_s"] * 1e6,
+                 f"VR={r['violation_rate'] * 100:.1f}% "
+                 f"completed={r['completed']} cloud={r['cloud_requests']} "
+                 f"{r['tokens_per_s']:.0f} tok/s "
+                 f"failovers={r['failovers']} "
+                 f"max-ovh={r['max_round_overhead_s'] * 1e3:.2f}ms")
+        _persist_section("serving", rows, args.quick)
+        if not args.quick:
+            rows = serving_bench.actuation_latency()
+            results["actuation"] = rows
+            for r in rows:
+                _csv("serving/actuation_round", r["ms"] * 1e3,
+                     f"priority={r['priority_ms']:.3f}ms scaling={r['scaling_ms']:.3f}ms")
+            rows = serving_bench.engine_throughput()
+            results["engine"] = rows
+            for r in rows:
+                _csv(f"serving/throughput/{r['tenants']}t", 0.0,
+                     f"{r['tokens_per_s']:.1f} tok/s")
 
     if want("fed"):
         from benchmarks import federation_bench

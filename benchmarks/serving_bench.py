@@ -1,7 +1,9 @@
-"""Serving-engine microbenchmarks (beyond-paper): controller actuation
-latency against a LIVE engine, and engine decode throughput vs tenants."""
+"""Serving-engine benchmarks (beyond-paper): the federated real-engine
+scenario (token-level DYVERSE), controller actuation latency against a
+LIVE engine, and engine decode throughput vs tenants."""
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
@@ -9,6 +11,44 @@ import numpy as np
 from repro.configs import get_reduced
 from repro.core import TenantSpec
 from repro.serving import EngineConfig, MultiTenantEngine
+
+
+def serving_federation(scenario: str = "serving_edge_pair"):
+    """Token-level DYVERSE end-to-end: the registry serving scenario
+    (real engines on a 2-node federation, scheduled node failure) per
+    policy. Raises if a run produced a non-finite violation rate or
+    completed zero requests — this doubles as the CI health gate for
+    the serving control loop."""
+    from repro.sim.scenario import run_scenario
+    res = run_scenario(scenario)
+    rows = []
+    for key, out in res.outcomes.items():
+        fr = res.results[key]
+        if not math.isfinite(out.violation_rate):
+            raise RuntimeError(f"{scenario}/{key}: non-finite violation rate")
+        if fr.completed <= 0:
+            raise RuntimeError(f"{scenario}/{key}: zero Edge-completed "
+                               f"requests — engine served nothing")
+        rows.append({
+            "bench": "serving_federation", "scenario": scenario,
+            "policy": key,
+            "violation_rate": out.violation_rate,
+            "total_requests": fr.total_requests,
+            "completed": fr.completed,
+            "cloud_requests": fr.cloud_requests,
+            "tokens": fr.tokens,
+            "tokens_per_s": fr.tokens / out.wall_s if out.wall_s else 0.0,
+            "virtual_duration_s": fr.virtual_duration_s,
+            "failed_nodes": fr.failed_nodes,
+            "failovers": sum(1 for p in fr.placements
+                             if p.kind == "failover"),
+            "max_round_overhead_s": max(
+                (p + s for nr in fr.node_results.values()
+                 for p, s in zip(nr.overhead_priority_s,
+                                 nr.overhead_scaling_s)), default=0.0),
+            "wall_s": out.wall_s,
+        })
+    return rows
 
 
 def engine_throughput(tenant_counts=(1, 2, 4)):

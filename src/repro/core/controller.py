@@ -259,6 +259,11 @@ class DyverseController:
     def admit(self, spec: TenantSpec, units: int | None = None) -> AdmissionResult:
         """Edge Manager decision on hosting an offloaded server."""
         units = units or self.default_units
+        if spec.max_units is not None:
+            # never allocate more than the actuator can enforce (the
+            # serving engine's compiled decode-batch cap): billed units
+            # must equal enforced units or Eq. 1 utilisation drifts
+            units = max(1, min(units, spec.max_units))
         hist = self._history.setdefault(spec.name, {"age": 0, "loyalty": 0})
         if spec.name in self.registry:
             return AdmissionResult(False, "already running")
@@ -695,6 +700,14 @@ class DyverseController:
         """Procedure 2, scaleup branch: aR_s = R_s · VR_s (≥1 unit), with
         victims drawn from the round's presorted priority order."""
         want = max(1, round(r_units * vr))
+        if st.spec.max_units is not None:
+            # actuator ceiling: grant only what can be enforced, so the
+            # pool never bills quota the scheduler would clamp away
+            want = min(want, st.spec.max_units - r_units)
+        if want <= 0:
+            report.actions.append(RoundAction(name, Decision.SCALE_UP, 0,
+                                              self._round_pri[k]))
+            return
         freed_for: str | None = None
         my_pri = self._round_pri[k]
         while self.pool.free_units < want:
@@ -771,6 +784,13 @@ class DyverseController:
         starts the eviction cascade."""
         r_units = self.pool.units(name)
         want = max(1, round(r_units * vr))
+        if st.spec.max_units is not None:
+            # actuator ceiling (see _scale_up_presorted)
+            want = min(want, st.spec.max_units - r_units)
+        if want <= 0:
+            report.actions.append(RoundAction(name, Decision.SCALE_UP, 0,
+                                              st.priority))
+            return
         freed_for: str | None = None
         while evict and self.pool.free_units < want:
             victim = self._lowest_priority_victim(exclude=name)

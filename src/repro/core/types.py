@@ -80,6 +80,11 @@ class TenantSpec:
     pricing: PricingModel = PricingModel.HYBRID
     arch: str = "tinyllama-1.1b"        # model this tenant serves
     min_units: int = 1                  # floor below which we terminate instead
+    # ceiling the actuator can actually enforce (None → unbounded). The
+    # serving engine sets this to its compiled decode-batch cap so the
+    # controller never bills NodeCapacity for slots the scheduler would
+    # clamp away — Eq. 1 utilisation always equals the enforced quota.
+    max_units: int | None = None
 
 
 @dataclass

@@ -1,3 +1,25 @@
-from repro.serving.engine import EngineConfig, MultiTenantEngine  # noqa: F401
+"""Multi-tenant serving under DYVERSE quotas.
+
+Exports resolve lazily so that the jax-free layers — the scenario API
+imports :mod:`repro.serving.federation` for its specs — never pay the
+jax import the engine needs."""
 from repro.serving.request import Request, RequestState  # noqa: F401
 from repro.serving.scheduler import QuotaScheduler  # noqa: F401
+
+_LAZY = {
+    "EngineConfig": "repro.serving.engine",
+    "MultiTenantEngine": "repro.serving.engine",
+    "CLOUD_LATENCY_S": "repro.serving.engine",
+    "ServingClassSpec": "repro.serving.spec",
+    "ServingSpec": "repro.serving.spec",
+    "VirtualClock": "repro.serving.spec",
+    "ServingFederation": "repro.serving.federation",
+    "ServingFederationResult": "repro.serving.federation",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

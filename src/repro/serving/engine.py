@@ -6,14 +6,33 @@ periodically reallocates (slots, pages) quotas based on measured request
 latencies vs each tenant's SLO. Quota actuation is control-plane-only:
 the scheduler admits/preempts; no weights or caches move.
 
+Preemption contract: a DECODE-phase victim of a quota shrink keeps its
+``generated`` tokens and its ``first_token_t``. On re-admission the
+engine re-prefills the FULL decoded context minus the last generated
+token and feeds that token back at the restored KV position, so the
+continuation is bitwise-identical to a run that was never preempted
+(greedy decode on the same weights), TTFT is not reset, and nothing is
+double-appended. The actuator also clears the runtime's batch slot for
+every preempted request — a victim must stop decoding the moment it
+leaves the active set, or it would keep generating into a slot that
+``free_slot`` can hand to someone else.
+
+Time: every timestamp the engine takes (arrival, first token, finish)
+comes from the injectable ``clock`` callable — ``time.perf_counter`` by
+default, or a :class:`~repro.serving.federation.VirtualClock` for
+deterministic simulation-grade runs (the serving federation's
+determinism contract).
+
 CPU-sized models validate the full control loop end-to-end; on a pod the
 same engine runs with pjit-sharded models and the Pallas paged-attention
 decode kernel (kernels/paged_attention.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -46,13 +65,25 @@ class _EngineActuator:
         self.engine = engine
 
     def apply_quota(self, tenant: str, quota: Quota) -> None:
-        sched = self.engine.sched
+        eng = self.engine
+        sched = eng.sched
+        # defensive clamp only: spec.max_units (set at add_tenant) keeps
+        # the controller from ever granting slots past slot_cap, so the
+        # enforced quota and the billed quota are the same object
+        q = Quota(min(quota.slots, eng.cfg.slot_cap), quota.pages)
         if tenant in sched.tenants:
-            q = Quota(min(quota.slots, self.engine.cfg.slot_cap), quota.pages)
-            sched.set_quota(tenant, q)
+            preempted = sched.set_quota(tenant, q)
+            rt = eng.tenants.get(tenant)
+            if rt is not None and preempted:
+                # a preemption victim must leave its decode slot NOW —
+                # otherwise _decode_step keeps generating for a request
+                # that is back in the waiting queue
+                victims = {id(r) for r in preempted}
+                for i, r in enumerate(rt.slot_req):
+                    if r is not None and id(r) in victims:
+                        rt.slot_req[i] = None
         else:
-            sched.add_tenant(tenant, Quota(
-                min(quota.slots, self.engine.cfg.slot_cap), quota.pages))
+            sched.add_tenant(tenant, q)
 
     def terminate(self, tenant: str) -> None:
         self.engine._evict_tenant(tenant)
@@ -84,8 +115,10 @@ class TenantRuntime:
 
 
 class MultiTenantEngine:
-    def __init__(self, cfg: EngineConfig | None = None, seed: int = 0):
+    def __init__(self, cfg: EngineConfig | None = None, seed: int = 0,
+                 clock: Callable[[], float] | None = None):
         self.cfg = cfg or EngineConfig()
+        self.clock = clock or time.perf_counter
         self.sched = QuotaScheduler(self.cfg.page_size)
         self.ctrl = DyverseController(
             capacity=NodeCapacity(slots=self.cfg.capacity_slots,
@@ -102,9 +135,21 @@ class MultiTenantEngine:
         self.steps = 0
         self.completed: list[RequestState] = []
         self.cloud_serviced: list[RequestState] = []
+        # federation seam: when set, Procedure-3 terminations hand their
+        # live queue to this hook instead of the Cloud path; returning
+        # True claims the requests (the federation migrates them)
+        self.evict_hook: Callable[[str, list[RequestState]], bool] | None \
+            = None
 
     # ------------------------------------------------------------ lifecycle
     def add_tenant(self, spec: TenantSpec, model_cfg: ModelConfig) -> bool:
+        # cap the controller at what the scheduler can enforce: quota
+        # slots beyond the compiled decode batch (slot_cap) would be
+        # clamped at actuation, so units past that cap must never be
+        # billed against NodeCapacity (Eq. 1 must see enforced quotas)
+        cap_units = self.cfg.slot_cap // max(self.ctrl.pool.uR.slots, 1)
+        if spec.max_units is None or spec.max_units > cap_units:
+            spec = dataclasses.replace(spec, max_units=cap_units)
         res = self.ctrl.admit(spec)
         if not res.admitted:
             return False
@@ -114,18 +159,24 @@ class MultiTenantEngine:
         return True
 
     def _evict_tenant(self, tenant: str) -> None:
-        """Procedure 3 actuation: flush runtime, redirect requests to Cloud."""
-        for rs in self.sched.remove_tenant(tenant):
-            rs.finish_t = time.perf_counter() + CLOUD_LATENCY_S
-            self.cloud_serviced.append(rs)
+        """Procedure 3 actuation: flush runtime, redirect requests to the
+        Cloud — unless a federation's ``evict_hook`` claims the queue for
+        migration to a sibling node."""
+        rts = self.sched.remove_tenant(tenant)
         self.tenants.pop(tenant, None)
+        if self.evict_hook is not None and self.evict_hook(tenant, rts):
+            return
+        now = self.clock()
+        for rs in rts:
+            rs.finish_t = now + CLOUD_LATENCY_S
+            self.cloud_serviced.append(rs)
 
     def submit(self, tenant: str, prompt: list[int],
                max_new_tokens: int = 8, user: int = 0) -> RequestState:
         self._rid += 1
         req = Request(rid=self._rid, tenant=tenant, prompt=prompt,
                       max_new_tokens=max_new_tokens,
-                      arrival_t=time.perf_counter(), user=user)
+                      arrival_t=self.clock(), user=user)
         if tenant not in self.tenants:
             rs = RequestState(req=req, phase=Phase.EVICTED)
             rs.finish_t = req.arrival_t + CLOUD_LATENCY_S
@@ -135,7 +186,6 @@ class MultiTenantEngine:
 
     # ------------------------------------------------------------ stepping
     def step(self) -> None:
-        now = time.perf_counter()
         for name in list(self.tenants):
             rt = self.tenants[name]
             # admit new requests within quota and prefill them
@@ -150,7 +200,7 @@ class MultiTenantEngine:
                 self._prefill_into_slot(rt, rs, slot)
             # one decode step for all active slots
             if any(r is not None for r in rt.slot_req):
-                self._decode_step(rt, now)
+                self._decode_step(rt)
         self.steps += 1
         if self.cfg.policy != "none" and \
                 self.steps % self.cfg.round_interval_steps == 0:
@@ -159,29 +209,43 @@ class MultiTenantEngine:
     def _prefill_into_slot(self, rt: TenantRuntime, rs: RequestState,
                            slot: int) -> None:
         cfg = rt.cfg
-        prompt = jnp.asarray(rs.req.prompt, jnp.int32)[None, :]
-        batch = {"tokens": prompt}
+        resumed = bool(rs.generated)
+        if resumed:
+            # preemption resume: rebuild KV for the full decoded context
+            # EXCEPT the last generated token — the next decode step
+            # feeds it back at the restored position, so the token
+            # stream continues exactly where it stopped (no re-prefill
+            # of just the prompt, no duplicate first token)
+            ctx = rs.req.prompt + rs.generated[:-1]
+        else:
+            ctx = rs.req.prompt
+        tokens = jnp.asarray(ctx, jnp.int32)[None, :]
+        batch = {"tokens": tokens}
         if cfg.is_encoder_decoder:
-            Se = max(prompt.shape[1] // cfg.encoder_seq_ratio, 1)
+            Se = max(tokens.shape[1] // cfg.encoder_seq_ratio, 1)
             batch["frames"] = jnp.zeros((1, Se, cfg.d_model), jnp.bfloat16)
         logits, cache1 = rt._prefill(rt.params, batch)
         rt.cache = _insert_cache(rt.cache, cache1, slot, cfg,
                                  self.cfg.max_seq_len)
-        tok = int(jnp.argmax(logits[0]))
-        rs.generated.append(tok)
-        rs.first_token_t = time.perf_counter()
+        if resumed:
+            tok = rs.generated[-1]
+        else:
+            tok = int(jnp.argmax(logits[0]))
+            rs.generated.append(tok)
+        if rs.first_token_t is None:     # TTFT survives preemption
+            rs.first_token_t = self.clock()
         rs.phase = Phase.DECODE
         rs.batch_slot = slot
         rt.slot_req[slot] = rs
-        rt.pos[slot] = len(rs.req.prompt)
+        rt.pos[slot] = len(ctx)
         rt.last_token[slot] = tok
 
-    def _decode_step(self, rt: TenantRuntime, now: float) -> None:
+    def _decode_step(self, rt: TenantRuntime) -> None:
         token = jnp.asarray(rt.last_token, jnp.int32)
         pos = jnp.asarray(rt.pos, jnp.int32)
         logits, rt.cache = rt._decode(rt.params, rt.cache, token, pos)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        t_done = time.perf_counter()
+        t_done = self.clock()
         for slot, rs in enumerate(rt.slot_req):
             if rs is None:
                 continue

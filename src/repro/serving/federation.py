@@ -1,0 +1,474 @@
+"""Serving federation: the real LLM engine under the sim control plane.
+
+This module closes the sim-to-serving loop (ROADMAP flagship): a
+:class:`ServingFederation` drives N :class:`~repro.serving.engine.
+MultiTenantEngine` instances — one per Edge node, each wrapping its own
+``QuotaScheduler`` + ``DyverseController`` — under the SAME placement /
+re-placement / fault machinery :class:`~repro.sim.federation.
+EdgeFederation` applies to the latency-model nodes. The seam between
+the two worlds is deliberately narrow:
+
+* **Sim side unchanged.** Placement policies duck-type on
+  ``node.ctrl.load_fraction_after()`` / ``node.name`` /
+  ``node.cfg.wan_extra_latency`` / ``node.cfg.unit_price`` — a
+  :class:`ServingNode` exposes exactly that surface, so every
+  ``PlacementPolicy`` and the fault-injection grammar
+  (``FederationConfig.node_failures``) work verbatim.
+* **Serving side real.** Scaling rounds move *actual* KV-page and
+  decode-slot quotas (``_EngineActuator``), Procedure-3 terminations and
+  node failures migrate *live request queues* to sibling nodes —
+  waiting requests re-submit with their original ``arrival_t``; active
+  requests restart cleanly on the new node (KV cannot move, so their
+  ``generated`` tokens are cleared; TTFT already served stays) — before
+  the Cloud/WAN fallback is paid. Completed requests feed per-request
+  token latencies into ``Monitor.record_request``, so Eq. 1 violation
+  rates are measured on real decode timelines, not a latency model.
+
+Determinism contract (virtual clock)
+====================================
+
+Every timestamp the engines take — arrival, first token, finish — comes
+from one shared :class:`VirtualClock` that advances ``step_dt`` per
+engine step, and every stochastic choice (arrival counts, prompt
+tokens, donation/premium draws) comes from generators seeded by
+``FederationConfig.seed``. Greedy decode on seeded parameters makes the
+token streams deterministic too. Two runs of the same scenario
+therefore produce IDENTICAL violation-rate and latency tables — wall
+clock never leaks into results (it is reported separately as overhead).
+This is what makes the serving path usable as a regression surface.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import TenantSpec
+from repro.serving.spec import (ServingClassSpec, ServingSpec,  # noqa: F401
+                                VirtualClock)
+from repro.sim.edgesim import WAN_EXTRA_LATENCY, SimResult
+from repro.sim.federation import (FederationConfig, FederationResult,
+                                  PlacementEvent, resolve_placement)
+from repro.sim.workload import Workload
+
+
+@dataclass
+class _NodeLink:
+    """The ``node.cfg`` surface the placement policies duck-type on."""
+
+    wan_extra_latency: float
+    unit_price: float
+
+
+class ServingNode:
+    """One Edge node of the serving federation: a real engine plus the
+    federation-facing bookkeeping (placement surface, cloud-tier
+    accounting, collected round reports)."""
+
+    def __init__(self, name: str, capacity_units: int, link: _NodeLink,
+                 fed_cfg: FederationConfig, spec: ServingSpec,
+                 clock: VirtualClock, seed: int):
+        from repro.serving.engine import EngineConfig, MultiTenantEngine
+        self.name = name
+        self.cfg = link
+        self.spec = spec
+        self.engine = MultiTenantEngine(EngineConfig(
+            page_size=spec.page_size,
+            slot_cap=spec.slot_cap,
+            max_seq_len=spec.max_seq_len,
+            round_interval_steps=10 ** 9,   # the federation drives rounds
+            policy=fed_cfg.policy,
+            capacity_slots=capacity_units,
+            capacity_pages=capacity_units * spec.pages_per_unit,
+            default_units=fed_cfg.default_units,
+        ), seed=seed, clock=clock)
+        # cloud-tier request samples accounted on this node (WAN paid)
+        self.cloud_lats: list[float] = []
+        self.cloud_slos: list[float] = []
+        # collected RoundReports (overhead + action streams)
+        self.reports: list = []
+
+    @property
+    def ctrl(self):
+        return self.engine.ctrl
+
+    def record_cloud(self, tenant: str, latency: float, slo: float) -> None:
+        self.ctrl.monitor.record_request(tenant, latency, slo)
+        self.cloud_lats.append(latency)
+        self.cloud_slos.append(slo)
+
+    def finalize(self, slo_of: dict[str, float]) -> SimResult:
+        mon = self.ctrl.monitor
+        lats = [rs.latency() for rs in self.engine.completed]
+        slos = [slo_of[rs.req.tenant] for rs in self.engine.completed]
+        lats += self.cloud_lats
+        slos += self.cloud_slos
+        total_req = mon.total_requests
+        total_viol = mon.total_violations
+        return SimResult(
+            policy=self.engine.cfg.policy,
+            violation_rate=total_viol / total_req if total_req else 0.0,
+            latencies=np.asarray(lats, np.float64),
+            slos=np.asarray(slos, np.float64),
+            overhead_priority_s=[r.priority_update_s for r in self.reports],
+            overhead_scaling_s=[r.scaling_s for r in self.reports],
+            overhead_forecast_s=[r.forecast_s for r in self.reports],
+            terminated=[t for r in self.reports for t in r.terminated],
+            round_actions=[r.actions for r in self.reports],
+            total_requests=total_req,
+            total_violations=total_viol,
+        )
+
+
+@dataclass
+class ServingFederationResult(FederationResult):
+    """FederationResult plus the serving-only aggregates the latency
+    model cannot produce."""
+
+    tokens: int = 0                 # generated tokens, federation-wide
+    completed: int = 0              # requests served by Edge engines
+    cloud_requests: int = 0         # requests serviced on the Cloud tier
+    virtual_duration_s: float = 0.0
+
+
+class ServingFederation:
+    """Drive N real engines under the sim federation's control plane.
+
+    ``workloads`` supplies the tenant fleet (names, users, base
+    latencies) exactly as for :class:`~repro.sim.federation.
+    EdgeFederation`; ``spec`` supplies the engine-side shape. The
+    donation/premium draws replicate the sim federation's RNG pattern
+    (federation-side, in fleet order) so serving scenarios and sim
+    scenarios describe tenants identically."""
+
+    def __init__(self, workloads: list[Workload], cfg: FederationConfig,
+                 spec: ServingSpec):
+        from repro.configs import get_reduced
+        from repro.serving.engine import CLOUD_LATENCY_S
+        self.cfg = cfg
+        self.spec = spec
+        self.cloud_latency_s = CLOUD_LATENCY_S
+        self.placement = resolve_placement(cfg.placement)
+        self.clock = VirtualClock(spec.step_dt)
+        names = [wl.name for wl in workloads]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate tenant names in federation fleet")
+        self.fleet = list(workloads)
+        self.wl = {wl.name: wl for wl in workloads}
+        self.cls = {wl.name: spec.class_for(wl.name) for wl in workloads}
+        self.model_cfg = {wl.name: get_reduced(self.cls[wl.name].arch)
+                          for wl in workloads}
+        self.slo = {
+            wl.name: (self.cls[wl.name].slo_s
+                      if self.cls[wl.name].slo_s is not None
+                      else cfg.slo_scale * wl.base_latency)
+            for wl in workloads}
+        self.nodes = [
+            ServingNode(
+                name=f"edge{i}",
+                capacity_units=cfg._per_node(cfg.node_capacities, i,
+                                             cfg.capacity_units),
+                link=_NodeLink(
+                    wan_extra_latency=cfg._per_node(
+                        cfg.node_wan_latency_s, i, WAN_EXTRA_LATENCY),
+                    unit_price=cfg._per_node(cfg.node_unit_price, i, 1.0)),
+                fed_cfg=cfg, spec=spec, clock=self.clock,
+                seed=cfg.seed + i)
+            for i in range(cfg.n_nodes)
+        ]
+        for node in self.nodes:
+            node.engine.evict_hook = \
+                lambda tenant, rts, n=node: self._on_evict(n, tenant, rts)
+        self.placements: list[PlacementEvent] = []
+        self.replaced: list[str] = []
+        self.failed: set[str] = set()
+        self.cloud_tenants: dict[str, ServingNode] = {}   # name → host node
+        self.hosted: dict[str, ServingNode] = {}
+        self._pending_migrations: list[tuple[ServingNode, str, list]] = []
+        self._validate_failures()
+        # spec draws federation-side in fleet order (same pattern as the
+        # sim federation, so placement never perturbs a sibling's roll)
+        rng = np.random.default_rng(cfg.seed)
+        # per-tenant arrival streams owned by the federation, NOT the
+        # nodes: the stream follows the tenant across migrations, and is
+        # identical across the policy sweep (equal-workload comparisons)
+        self.rngs = {wl.name: np.random.default_rng([cfg.seed, i])
+                     for i, wl in enumerate(self.fleet)}
+        for wl in self.fleet:
+            donation = bool(rng.random() < cfg.donation_fraction)
+            premium = float(rng.random() < 0.25)
+            self._place(wl, donation=donation, premium=premium, t=0.0)
+
+    # ---------------------------------------------------------- validation
+    def _validate_failures(self) -> None:
+        cfg, spec = self.cfg, self.spec
+        node_names = {n.name for n in self.nodes}
+        normalized: list[tuple[float, tuple[str, ...]]] = []
+        for ft, fnodes in cfg.node_failures:
+            fnames = (fnodes,) if isinstance(fnodes, str) else tuple(fnodes)
+            if not fnames:
+                raise ValueError(f"node failure at t={ft} names no nodes")
+            for fname in fnames:
+                if fname not in node_names:
+                    raise ValueError(f"node_failures names unknown node "
+                                     f"{fname!r} (have {sorted(node_names)})")
+            if not 0 < ft:
+                raise ValueError(f"node failure at t={ft} must be > 0")
+            rv = spec.round_virtual_s
+            boundary = float(np.ceil(ft / rv)) * rv
+            if boundary >= spec.duration_virtual_s:
+                raise ValueError(
+                    f"node failure at t={ft} would never fire: its round "
+                    f"boundary {boundary:g} is not before the virtual "
+                    f"session end {spec.duration_virtual_s:g}")
+            normalized.append((float(ft), fnames))
+        if len({nm for _, fn in normalized for nm in fn}) >= cfg.n_nodes:
+            raise ValueError("node_failures would kill every node")
+        self._pending_failures = sorted(normalized)
+
+    # ---------------------------------------------------------- placement
+    def _feasible_nodes(self, wl: Workload,
+                        exclude: ServingNode | None = None):
+        cands = [n for n in self.nodes
+                 if n is not exclude and n.name not in self.failed
+                 and n.ctrl.can_admit()]
+        return sorted(cands, key=lambda n: self.placement.key(n, wl))
+
+    def _live_host(self, preferred: ServingNode | None) -> ServingNode:
+        if preferred is not None and preferred.name not in self.failed:
+            return preferred
+        for n in self.nodes:
+            if n.name not in self.failed:
+                return n
+        raise RuntimeError("no live node left to host the Cloud tier")
+
+    def _place(self, wl: Workload, *, donation: bool, premium: float,
+               t: float, spec: TenantSpec | None = None,
+               source: str | None = None, prior_age: int = 0,
+               prior_loyalty: int = 0,
+               kind: str | None = None) -> ServingNode | None:
+        if kind is None:
+            kind = "admit" if source is None else "replace"
+        src_node = next((n for n in self.nodes if n.name == source), None)
+        feasible = self._feasible_nodes(wl, exclude=src_node)
+        if feasible:
+            node = feasible[0]
+            if prior_age:
+                node.ctrl.remember_age(wl.name, prior_age)
+            if prior_loyalty:
+                node.ctrl.remember_loyalty(wl.name, prior_loyalty)
+            tspec = spec if spec is not None else TenantSpec(
+                name=wl.name,
+                slo_latency=self.slo[wl.name],
+                users=wl.users(),
+                donation=donation,
+                pricing=self.cfg.pricing,
+                premium=premium,
+            )
+            if not node.engine.add_tenant(tspec, self.model_cfg[wl.name]):
+                raise RuntimeError(
+                    f"admit refused on feasible node {node.name}")
+            self.hosted[wl.name] = node
+            self.cloud_tenants.pop(wl.name, None)
+            self.placements.append(PlacementEvent(
+                t=round(t), tenant=wl.name, node=node.name, kind=kind,
+                source=source))
+            if source is not None:
+                self.replaced.append(wl.name)
+            return node
+        host = self._live_host(src_node or self.nodes[0])
+        self.hosted.pop(wl.name, None)
+        self.cloud_tenants[wl.name] = host
+        self.placements.append(PlacementEvent(
+            t=round(t), tenant=wl.name, node=None, kind="cloud",
+            source=source))
+        return None
+
+    # ---------------------------------------------------------- migration
+    def _on_evict(self, node: ServingNode, tenant: str, rts: list) -> bool:
+        """``MultiTenantEngine.evict_hook``: claim a Procedure-3 victim's
+        live queue so the federation can migrate it (sibling first,
+        Cloud second) instead of the engine's default Cloud path."""
+        self._pending_migrations.append((node, tenant, rts))
+        return True
+
+    def _cloud_flush(self, host: ServingNode, tenant: str,
+                     rts: list, now: float) -> None:
+        """Queue of a tenant nowhere placeable: every request is serviced
+        by the origin Cloud server — queueing already paid plus the WAN
+        round-trip and the Cloud service latency."""
+        slo = self.slo[tenant]
+        extra = host.cfg.wan_extra_latency + self.cloud_latency_s
+        for rs in rts:
+            rs.finish_t = now + extra
+            host.record_cloud(tenant, rs.finish_t - rs.req.arrival_t, slo)
+
+    def _migrate_queue(self, dest: ServingNode, rts: list) -> None:
+        """Hand a migrated tenant's live queue to its new node. Waiting
+        requests re-enqueue untouched; requests that were mid-decode
+        restart from their prompt (the KV cache cannot move across
+        nodes) but keep their arrival time and served TTFT."""
+        for rs in rts:
+            if rs.generated:
+                rs.generated.clear()
+            dest.engine.sched.requeue(rs)
+
+    def _migrate_pending(self, t: float) -> None:
+        for node, tenant, rts in self._pending_migrations:
+            wl = self.wl[tenant]
+            age = node.ctrl.prior_age(tenant)
+            loyalty = node.ctrl.prior_loyalty(tenant)
+            spec = TenantSpec(
+                name=tenant,
+                slo_latency=self.slo[tenant],
+                users=wl.users(),
+                donation=False,     # a migrated refugee no longer donates
+                pricing=self.cfg.pricing,
+                premium=0.0,        # premium was spent on the first node
+            )
+            dest = self._place(wl, donation=False, premium=0.0, t=t,
+                               spec=spec, source=node.name, prior_age=age,
+                               prior_loyalty=loyalty)
+            if dest is not None:
+                self._migrate_queue(dest, rts)
+            else:
+                self._cloud_flush(self._live_host(node), tenant, rts, t)
+        self._pending_migrations.clear()
+
+    # ---------------------------------------------------------- faults
+    def _fail_node(self, node: ServingNode, t: float) -> None:
+        """Whole-node failure: every tenant the node hosts re-places on
+        the surviving siblings with its spec intact (the infrastructure's
+        fault — no Age_s charge, ``release_tenant``), its live queue
+        migrating with it; Cloud-tier tenants it hosted move their
+        accounting to a live node. Requests the dead node already served
+        still count in Eq. 1."""
+        self.failed.add(node.name)
+        eng = node.engine
+        refugees = []
+        for name in list(eng.ctrl.registry):
+            age = node.ctrl.prior_age(name)
+            loyalty = node.ctrl.prior_loyalty(name)
+            st = eng.ctrl.release_tenant(name)
+            rts = eng.sched.remove_tenant(name)
+            eng.tenants.pop(name, None)
+            refugees.append((name, st, rts, age, loyalty))
+        for name, st, rts, age, loyalty in refugees:
+            wl = self.wl[name]
+            dest = self._place(wl, donation=st.spec.donation,
+                               premium=st.spec.premium, t=t, spec=st.spec,
+                               source=node.name, prior_age=age,
+                               prior_loyalty=loyalty, kind="failover")
+            if dest is not None:
+                self._migrate_queue(dest, rts)
+            else:
+                self._cloud_flush(self._live_host(None), name, rts, t)
+        for name, host in list(self.cloud_tenants.items()):
+            if host is node:
+                self.cloud_tenants[name] = self._live_host(None)
+
+    def _apply_failures(self, t1: float) -> None:
+        due: list[str] = []
+        while self._pending_failures and self._pending_failures[0][0] <= t1:
+            _, fnames = self._pending_failures.pop(0)
+            for fname in fnames:
+                if fname not in self.failed and fname not in due:
+                    due.append(fname)
+        if not due:
+            return
+        self.failed.update(due)          # all dead before any re-placement
+        for fname in due:
+            node = next(n for n in self.nodes if n.name == fname)
+            self._fail_node(node, t1)
+
+    # ---------------------------------------------------------- execution
+    def _submit_arrivals(self) -> None:
+        """One step's Poisson arrivals for every tenant, in fleet order.
+        Cloud-tier tenants draw from the SAME stream (their requests are
+        serviced by the origin over the WAN), so a tenant's workload is
+        independent of where it happens to be hosted."""
+        for wl in self.fleet:
+            name = wl.name
+            c = self.cls[name]
+            rng = self.rngs[name]
+            k = int(rng.poisson(c.rate))
+            for _ in range(k):
+                prompt = [int(x) for x in
+                          rng.integers(1, self.spec.vocab, c.prompt_len)]
+                node = self.hosted.get(name)
+                if node is not None and node.name not in self.failed:
+                    node.engine.submit(name, prompt,
+                                       max_new_tokens=c.max_new_tokens,
+                                       user=wl.users())
+                else:
+                    host = self._live_host(self.cloud_tenants.get(name))
+                    host.record_cloud(
+                        name, host.cfg.wan_extra_latency
+                        + self.cloud_latency_s, self.slo[name])
+
+    def _live_nodes(self) -> list[ServingNode]:
+        return [n for n in self.nodes if n.name not in self.failed]
+
+    def run(self) -> ServingFederationResult:
+        spec, cfg = self.spec, self.cfg
+        for r in range(spec.rounds):
+            for _ in range(spec.steps_per_round):
+                self.clock.tick()
+                self._submit_arrivals()
+                for node in self._live_nodes():
+                    node.engine.step()
+            t1 = (r + 1) * spec.round_virtual_s
+            if cfg.policy != "none" and t1 < spec.duration_virtual_s:
+                # all rounds first, re-placement after — a refugee must
+                # never land on a sibling whose round at this boundary
+                # hasn't run yet (same ordering as the sim federation)
+                for node in self._live_nodes():
+                    node.reports.append(node.ctrl.run_round())
+                self._migrate_pending(t1)
+            self._apply_failures(t1)
+        # let in-flight requests finish (no new arrivals, no rounds)
+        for _ in range(spec.drain_steps):
+            live = self._live_nodes()
+            if not any(tq.active or tq.waiting
+                       for n in live
+                       for tq in n.engine.sched.tenants.values()):
+                break
+            self.clock.tick()
+            for node in live:
+                node.engine.step()
+        # anything still stuck after the drain cap is Cloud-serviced so
+        # every submitted request is accounted exactly once
+        now = self.clock()
+        for node in self._live_nodes():
+            for name in list(node.engine.sched.tenants):
+                tq = node.engine.sched.tenants[name]
+                leftovers = list(tq.active) + list(tq.waiting)
+                if leftovers:
+                    tq.active.clear()
+                    tq.waiting.clear()
+                    self._cloud_flush(node, name, leftovers, now)
+        return self._finalize()
+
+    def _finalize(self) -> ServingFederationResult:
+        node_results = {n.name: n.finalize(self.slo) for n in self.nodes}
+        total_req = sum(r.total_requests for r in node_results.values())
+        total_viol = sum(r.total_violations for r in node_results.values())
+        completed = sum(len(n.engine.completed) for n in self.nodes)
+        tokens = sum(len(rs.generated)
+                     for n in self.nodes for rs in n.engine.completed)
+        cloud_req = sum(len(n.cloud_lats) for n in self.nodes)
+        return ServingFederationResult(
+            policy=self.cfg.policy,
+            node_results=node_results,
+            violation_rate=total_viol / total_req if total_req else 0.0,
+            total_requests=total_req,
+            total_violations=total_viol,
+            placements=self.placements,
+            replaced=self.replaced,
+            cloud=sorted(self.cloud_tenants),
+            failed_nodes=sorted(self.failed),
+            tokens=tokens,
+            completed=completed,
+            cloud_requests=cloud_req,
+            virtual_duration_s=self.clock(),
+        )

@@ -1,11 +1,21 @@
 """Quota-aware continuous-batching scheduler.
 
 Per-tenant quotas come from DYVERSE (Quota.slots = concurrent decode
-sequences; Quota.pages = KV pages). A sequence of context length C holds
-ceil(C / page_size) pages of its tenant's page quota. When a quota
-shrinks below current usage the scheduler preempts the YOUNGEST sequences
-(they lose the least work) back to the queue — that is the engine-level
-actuation of a DYVERSE scale-down, and it is control-plane-only.
+sequences; Quota.pages = KV pages). When a quota shrinks below current
+usage the scheduler preempts the YOUNGEST sequences (they lose the least
+work) back to the queue — that is the engine-level actuation of a
+DYVERSE scale-down, and it is control-plane-only.
+
+Page accounting is *worst-case at admission*: an active sequence
+reserves ``ceil((prompt + max_new_tokens) / page_size)`` pages — the
+most it can ever hold — for its whole residency, not its instantaneous
+``context_len``. Reserving the instantaneous footprint would admit
+requests against pages their neighbours are about to grow into: active
+requests gain a token per decode step, so ``Σ context pages`` rises
+between scaling rounds with no admission (or preemption) check in
+between, silently overcommitting ``quota.pages``. With worst-case
+reservation, ``pages_used ≤ quota.pages`` is a step-time invariant —
+decode growth can never exceed what admission already accounted for.
 """
 from __future__ import annotations
 
@@ -17,6 +27,13 @@ from repro.core.types import Quota
 from repro.serving.request import Phase, Request, RequestState
 
 
+def reserved_pages(rs: RequestState, page_size: int) -> int:
+    """Worst-case KV pages a request can ever occupy: the full prompt
+    plus every token it is allowed to generate."""
+    peak = len(rs.req.prompt) + rs.req.max_new_tokens
+    return math.ceil(max(peak, 1) / page_size)
+
+
 @dataclass
 class TenantQueues:
     quota: Quota
@@ -24,8 +41,9 @@ class TenantQueues:
     active: list[RequestState] = field(default_factory=list)
 
     def pages_used(self, page_size: int) -> int:
-        return sum(math.ceil(max(r.context_len, 1) / page_size)
-                   for r in self.active)
+        """Pages reserved by the active set (worst-case at admission —
+        see module docstring)."""
+        return sum(reserved_pages(r, page_size) for r in self.active)
 
 
 class QuotaScheduler:
@@ -45,10 +63,16 @@ class QuotaScheduler:
         out = list(tq.active) + list(tq.waiting)
         for r in out:
             r.phase = Phase.EVICTED
+            r.batch_slot = -1
         return out
 
     def set_quota(self, name: str, quota: Quota) -> list[RequestState]:
-        """DYVERSE vertical scaling actuation. Returns preempted requests."""
+        """DYVERSE vertical scaling actuation. Returns preempted requests.
+
+        Preemption is loss-less: a victim keeps its ``generated`` tokens
+        and ``first_token_t``; on re-admission the engine re-prefills the
+        full decoded context so the continuation is bitwise-identical to
+        an unpreempted run (pinned by the preemption regression test)."""
         tq = self.tenants.get(name)
         if tq is None:
             return []
@@ -56,21 +80,19 @@ class QuotaScheduler:
         preempted: list[RequestState] = []
         # slots shrink → preempt youngest
         while len(tq.active) > quota.slots:
-            victim = max(tq.active, key=lambda r: r.req.arrival_t)
-            tq.active.remove(victim)
-            victim.phase = Phase.QUEUED
-            victim.batch_slot = -1
-            tq.waiting.appendleft(victim)
-            preempted.append(victim)
+            preempted.append(self._preempt_youngest(tq))
         # pages shrink → preempt youngest until within budget
         while tq.pages_used(self.page_size) > quota.pages and tq.active:
-            victim = max(tq.active, key=lambda r: r.req.arrival_t)
-            tq.active.remove(victim)
-            victim.phase = Phase.QUEUED
-            victim.batch_slot = -1
-            tq.waiting.appendleft(victim)
-            preempted.append(victim)
+            preempted.append(self._preempt_youngest(tq))
         return preempted
+
+    def _preempt_youngest(self, tq: TenantQueues) -> RequestState:
+        victim = max(tq.active, key=lambda r: r.req.arrival_t)
+        tq.active.remove(victim)
+        victim.phase = Phase.QUEUED
+        victim.batch_slot = -1
+        tq.waiting.appendleft(victim)
+        return victim
 
     # ---- request flow -----------------------------------------------------
     def submit(self, req: Request) -> RequestState:
@@ -78,16 +100,23 @@ class QuotaScheduler:
         self.tenants[req.tenant].waiting.append(rs)
         return rs
 
+    def requeue(self, rs: RequestState) -> None:
+        """Re-enqueue a migrated request (federation failover / Procedure-3
+        re-placement) WITHOUT building a new Request — arrival_t and the
+        accumulated queueing time must survive the move."""
+        rs.phase = Phase.QUEUED
+        rs.batch_slot = -1
+        self.tenants[rs.req.tenant].waiting.append(rs)
+
     def admit_waiting(self, name: str) -> list[RequestState]:
         """Move waiting→active while slot & page quotas allow. Returns the
-        newly admitted requests (they need prefill)."""
+        newly admitted requests (they need prefill). Pages are reserved
+        worst-case (prompt + max_new_tokens), matching ``pages_used``."""
         tq = self.tenants[name]
         admitted = []
         while tq.waiting:
             cand: RequestState = tq.waiting[0]
-            need_pages = math.ceil(
-                (len(cand.req.prompt) + cand.req.max_new_tokens)
-                / self.page_size)
+            need_pages = reserved_pages(cand, self.page_size)
             if len(tq.active) + 1 > tq.quota.slots:
                 break
             if tq.pages_used(self.page_size) + need_pages > tq.quota.pages:

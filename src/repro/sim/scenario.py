@@ -71,7 +71,10 @@ True
 Named paper scenarios live in the :data:`SCENARIOS` registry
 (``paper_game_32``, ``paper_face_detection``, ``mixed_fleet``,
 ``hetero_one_big_many_small``, ``proactive_game_32``,
-``proactive_face_detection``, ``node_failure_midrun``) and can be run
+``proactive_face_detection``, ``node_failure_midrun``,
+``serving_edge_pair`` — the latter drives the REAL multi-tenant LLM
+engine (:mod:`repro.serving.federation`) with ``engine="serving"`` and a
+:class:`~repro.serving.federation.ServingSpec`) and can be run
 from the command line — the CI smoke runs every entry::
 
     PYTHONPATH=src python -m repro.sim.scenario --quick
@@ -98,6 +101,7 @@ from repro.sim.edgesim import ENGINES, WAN_EXTRA_LATENCY
 from repro.sim.federation import (PLACEMENTS, SWEEP_POLICIES, EdgeFederation,
                                   FederationConfig, FederationResult,
                                   PlacementEvent, paper_capacity_units)
+from repro.serving.spec import ServingClassSpec, ServingSpec
 from repro.sim.workload import (Workload, make_game_fleet, make_stream_fleet)
 
 # tenant-class kinds → (builder, default name prefix)
@@ -256,6 +260,9 @@ class Scenario:
     rng_workers: int = 2
     seed: int = 7
     description: str = ""
+    # engine="serving" only: the real-engine shape (models, arrival
+    # rates, virtual-clock cadence) the fleet is served with
+    serving: ServingSpec | None = None
 
     def validate(self) -> None:
         from repro.core.forecast import FORECASTERS, SCALING_POLICIES
@@ -274,7 +281,18 @@ class Scenario:
         if self.forecaster not in FORECASTERS:
             raise ValueError(f"forecaster {self.forecaster!r} not in "
                              f"{sorted(FORECASTERS)}")
-        if self.engine not in ENGINES:
+        if self.engine == "serving":
+            # the real multi-tenant LLM engine under the same federation
+            # control plane (repro.serving.federation)
+            if self.serving is None:
+                raise ValueError(f"scenario {self.name!r} has "
+                                 f"engine='serving' but no ServingSpec")
+            if tuple(self.scaling_policies) != ("reactive",):
+                raise ValueError("engine='serving' supports only the "
+                                 "reactive scaling policy for now")
+            for wl in self.fleet.build():
+                self.serving.class_for(wl.name)   # raises on no match
+        elif self.engine not in ENGINES:
             raise ValueError(f"engine {self.engine!r} not in {ENGINES}")
         node_names = {f"edge{i}" for i in range(self.topology.n_nodes)}
         for f in self.faults.node_failures:
@@ -328,6 +346,10 @@ class Scenario:
         to ``rounds`` intervals of ``round_interval`` seconds and fault
         times rescale proportionally (clamped inside the run so a
         mid-session failure stays mid-session)."""
+        if self.engine == "serving":
+            # serving cadence lives in the ServingSpec's virtual clock
+            # (rounds × steps × step_dt) and is already smoke-sized
+            return self
         ri = min(self.round_interval, round_interval)
         dur = rounds * ri
         if dur >= self.duration_s:
@@ -383,9 +405,11 @@ class ScenarioResult:
         cap, caps = sc.topology.resolve_capacity(sc.fleet.size)
         cap_s = ("[" + " ".join(str(c) for c in caps) + "]u" if caps
                  else f"{cap}u×{sc.topology.n_nodes}")
+        dur = (sc.serving.duration_virtual_s if sc.engine == "serving"
+               else sc.duration_s)
         lines = [
             f"scenario {self.name}: {sc.topology.n_nodes} nodes ({cap_s}), "
-            f"{sc.fleet.size} tenants, {sc.duration_s}s session, "
+            f"{sc.fleet.size} tenants, {dur:g}s session, "
             f"placement={sc.placement}, engine={sc.engine}"
         ]
         if sc.faults.node_failures:
@@ -470,7 +494,12 @@ def run_scenario(scenario: Scenario | str, *,
             fleet = scenario.fleet.build()
             cfg = scenario.federation_config(policy, spol)
             t0 = time.perf_counter()
-            res = EdgeFederation(fleet, cfg).run()
+            if scenario.engine == "serving":
+                # lazy: pulls jax only when a serving scenario runs
+                from repro.serving.federation import ServingFederation
+                res = ServingFederation(fleet, cfg, scenario.serving).run()
+            else:
+                res = EdgeFederation(fleet, cfg).run()
             wall = time.perf_counter() - t0
             over = res.mean_round_overhead_s
             out.results[key] = res
@@ -574,6 +603,26 @@ register_scenario(Scenario(
     scaling_policies=("reactive", "proactive", "hybrid"),
     forecaster="seasonal_naive",
     round_interval=60,
+))
+
+register_scenario(Scenario(
+    name="serving_edge_pair",
+    description="REAL engine federation: 4 LLM tenants (2 hot @0.7 "
+                "req/step, 2 tail @0.15) on 2 nodes of 8u; sdps moves "
+                "actual decode-slot/KV-page quotas (1→4 slots for the "
+                "hot tenants); edge1 dies at virtual t=8s and its live "
+                "queues migrate to edge0 or the Cloud tier.",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 2, prefix="hot"),
+                             TenantClassSpec("game", 2, prefix="tail"))),
+    topology=TopologySpec(n_nodes=2, capacity_units=8),
+    policies=("none", "sdps"),
+    default_units=1,
+    engine="serving",
+    faults=FaultSpec((NodeFailure(t=8, node="edge1"),)),
+    serving=ServingSpec(classes=(
+        ServingClassSpec(prefix="hot", rate=0.7, slo_s=2.0),
+        ServingClassSpec(prefix="tail", rate=0.15, slo_s=4.0),
+    ), rounds=6),
 ))
 
 register_scenario(Scenario(

@@ -120,7 +120,10 @@ def test_dyverse_round_scales_up_violating_tenant():
 
 
 def test_engine_termination_redirects_to_cloud():
-    eng = MultiTenantEngine(EngineConfig(policy="sps", slot_cap=2,
+    # slot_cap=4 so vip's scale-up target is actually enforceable — the
+    # controller no longer evicts siblings to fund slots past the
+    # scheduler's clamp (the quota-divergence fix)
+    eng = MultiTenantEngine(EngineConfig(policy="sps", slot_cap=4,
                                          capacity_slots=4, capacity_pages=64,
                                          max_seq_len=64,
                                          round_interval_steps=10**9))
@@ -142,3 +145,160 @@ def test_engine_termination_redirects_to_cloud():
     r = eng.submit("vip", [9, 10, 11], max_new_tokens=2)
     eng.drain(max_steps=40)
     assert r.phase == Phase.DONE
+
+# ----------------------------------------------------- preemption regression
+def _tiny_cfg(**kw):
+    base = dict(policy="none", slot_cap=2, capacity_slots=4,
+                capacity_pages=64, max_seq_len=64,
+                round_interval_steps=10**9)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def test_preemption_resume_bitwise_identical():
+    """A preempted-then-resumed request must produce EXACTLY the token
+    stream of an unpreempted run, keep its TTFT, and never double-append
+    (the resume path re-prefills prompt + generated[:-1] and feeds the
+    last generated token back at the restored KV position)."""
+    from repro.serving.spec import VirtualClock
+
+    def fresh():
+        clock = VirtualClock(0.25)
+        eng = MultiTenantEngine(_tiny_cfg(), seed=3, clock=clock)
+        assert eng.add_tenant(TenantSpec(name="t", slo_latency=60.0),
+                              get_reduced("tinyllama-1.1b"))
+        return eng, clock
+
+    # reference: run to completion without interference
+    ref, clock = fresh()
+    r0 = ref.submit("t", [5, 7, 9, 11], max_new_tokens=8)
+    while r0.phase != Phase.DONE:
+        clock.tick()
+        ref.step()
+    want = list(r0.generated)
+    assert len(want) == 8
+
+    # victim: preempt mid-decode, idle a while, restore, finish
+    eng, clock = fresh()
+    r1 = eng.submit("t", [5, 7, 9, 11], max_new_tokens=8)
+    for _ in range(4):                      # prefill + a few decode steps
+        clock.tick()
+        eng.step()
+    assert r1.phase == Phase.DECODE and 1 < len(r1.generated) < 8
+    ttft = r1.first_token_t
+    mid = list(r1.generated)
+    eng.ctrl.actuator.apply_quota("t", Quota(slots=0, pages=64))
+    assert r1.phase == Phase.QUEUED and r1.batch_slot == -1
+    rt = eng.tenants["t"]
+    assert all(rs is not r1 for rs in rt.slot_req)   # slot really freed
+    for _ in range(3):                      # starved: no progress, no decode
+        clock.tick()
+        eng.step()
+    assert r1.generated == mid              # nothing generated while queued
+    eng.ctrl.actuator.apply_quota("t", Quota(slots=2, pages=64))
+    while r1.phase != Phase.DONE:
+        clock.tick()
+        eng.step()
+    assert r1.generated == want             # bitwise-identical continuation
+    assert r1.first_token_t == ttft         # TTFT survives preemption
+
+
+def test_pages_never_exceed_quota_during_shrink():
+    """Worst-case page reservation at admission makes pages_used ≤
+    quota.pages a STEP-TIME invariant, including across mid-run quota
+    shrinks (no decode-growth overcommit between scaling rounds)."""
+    from repro.serving.spec import VirtualClock
+    clock = VirtualClock(0.25)
+    eng = MultiTenantEngine(_tiny_cfg(slot_cap=4, page_size=4),
+                            seed=0, clock=clock)
+    assert eng.add_tenant(TenantSpec(name="t", slo_latency=60.0),
+                          get_reduced("tinyllama-1.1b"))
+    eng.ctrl.actuator.apply_quota("t", Quota(slots=4, pages=12))
+    rng = np.random.default_rng(0)
+    shrink_at = {6: Quota(slots=4, pages=8), 12: Quota(slots=4, pages=5)}
+    for step in range(20):
+        if step % 2 == 0:
+            eng.submit("t", [int(x) for x in rng.integers(1, 200, 6)],
+                       max_new_tokens=6)        # worst case 12 tokens → 3 pages
+        if step in shrink_at:
+            eng.ctrl.actuator.apply_quota("t", shrink_at[step])
+        clock.tick()
+        eng.step()
+        tq = eng.sched.tenants["t"]
+        used = tq.pages_used(eng.cfg.page_size)
+        assert used <= tq.quota.pages, (step, used, tq.quota.pages)
+        # and the worst-case reservation really covers the live contexts
+        for rs in tq.active:
+            assert rs.context_len <= len(rs.req.prompt) + rs.req.max_new_tokens
+
+
+def test_actuator_controller_quota_agreement():
+    """The quota the controller bills (pool) and the quota the scheduler
+    enforces must be the same object: spec.max_units caps units at
+    admission to the compiled decode-batch limit, so no round can grant
+    slots the actuator would clamp away."""
+    eng = MultiTenantEngine(_tiny_cfg(policy="sdps", slot_cap=2,
+                                      capacity_slots=16, capacity_pages=64,
+                                      default_units=8))
+    assert eng.add_tenant(TenantSpec(name="t", slo_latency=1e-4),
+                          get_reduced("tinyllama-1.1b"))
+    # default 8 units was capped to slot_cap=2 at admission
+    assert eng.ctrl.pool.units("t") == 2
+    assert eng.ctrl.registry["t"].spec.max_units == 2
+    assert eng.sched.tenants["t"].quota.slots == 2
+    # drive violating traffic through several rounds: billed == enforced
+    for r in range(3):
+        for _ in range(6):
+            eng.submit("t", [1, 2, 3], max_new_tokens=2)
+        eng.drain(max_steps=60)
+        eng.ctrl.run_round()
+        billed = eng.ctrl.registry["t"].quota.slots
+        enforced = eng.sched.tenants["t"].quota.slots
+        assert billed == enforced <= eng.cfg.slot_cap
+
+
+# ----------------------------------------------------- eviction accounting
+def test_eviction_cloud_latency_accounting():
+    """Procedure-3 eviction redirects the live queue to the Cloud with
+    finish_t = now + CLOUD_LATENCY_S exactly (virtual clock), and the
+    evicted requests never appear in `completed` — including requests
+    still sitting in `waiting`."""
+    from repro.serving.engine import CLOUD_LATENCY_S
+    from repro.serving.spec import VirtualClock
+    clock = VirtualClock(0.25)
+    eng = MultiTenantEngine(_tiny_cfg(slot_cap=1), seed=0, clock=clock)
+    assert eng.add_tenant(TenantSpec(name="t", slo_latency=60.0),
+                          get_reduced("tinyllama-1.1b"))
+    rs = [eng.submit("t", [1 + i, 2, 3], max_new_tokens=8) for i in range(3)]
+    for _ in range(2):                      # 1 active mid-decode, 2 waiting
+        clock.tick()
+        eng.step()
+    assert rs[0].phase == Phase.DECODE
+    assert [r.phase for r in rs[1:]] == [Phase.QUEUED, Phase.QUEUED]
+    now = clock()
+    eng._evict_tenant("t")
+    assert all(r.phase == Phase.EVICTED for r in rs)
+    assert all(r.finish_t == now + CLOUD_LATENCY_S for r in rs)
+    assert all(r in eng.cloud_serviced for r in rs)
+    assert eng.completed == []
+    assert "t" not in eng.tenants and "t" not in eng.sched.tenants
+    # stepping on is harmless and never resurrects evicted requests
+    clock.tick()
+    eng.step()
+    assert eng.completed == []
+
+
+def test_eviction_while_all_requests_waiting():
+    from repro.serving.engine import CLOUD_LATENCY_S
+    from repro.serving.spec import VirtualClock
+    clock = VirtualClock(0.5)
+    eng = MultiTenantEngine(_tiny_cfg(), seed=0, clock=clock)
+    assert eng.add_tenant(TenantSpec(name="t", slo_latency=60.0),
+                          get_reduced("tinyllama-1.1b"))
+    clock.tick()
+    rs = [eng.submit("t", [4, 5, 6], max_new_tokens=4) for _ in range(2)]
+    eng._evict_tenant("t")                   # nothing ever prefilled
+    assert all(r.phase == Phase.EVICTED for r in rs)
+    assert all(r.finish_t == clock() + CLOUD_LATENCY_S for r in rs)
+    assert all(r.latency() == CLOUD_LATENCY_S for r in rs)
+    assert eng.completed == []
