@@ -25,6 +25,7 @@ used before, so the numbers stay comparable across the refactor.
 """
 from __future__ import annotations
 
+import gc
 import math
 import time
 
@@ -186,6 +187,79 @@ def fleet_scale_sweep(quick: bool = False, repeats: int = 2) -> list[dict]:
             if quick and not row["bitwise_identical"]:
                 raise AssertionError(
                     f"engine divergence on {row}: batched != vectorized")
+            rows.append(row)
+    return rows
+
+
+def jax_scale_sweep(quick: bool = False, repeats: int = 3,
+                    vr_tol: float = 0.02) -> list[dict]:
+    """``jaxscale``: the jit+vmap jax engine vs the batched numpy engine
+    on stream-fleet federations swept to mega-scale (10^5 tenants,
+    tens of millions of tenant-seconds).
+
+    The jax engine's contract is statistical (counter-based float32
+    draws — see repro/sim/engines/jax_backend.py), so instead of the
+    fedscale bitwise cross-check every row asserts |ΔVR| ≤ ``vr_tol``
+    and finite VRs — in BOTH quick (CI smoke) and full mode, so an
+    engine divergence fails the build rather than persisting bad rows.
+    Walls are min-of-``repeats``; EdgeFederation construction (placement
+    and admission of the fleet) stays outside the measured wall, as in
+    fedscale.
+    """
+    import jax    # the engine under test; device count goes on record
+
+    if quick:
+        configs = [("stream", 2, 16, 240, 120)]
+        policies: tuple[str, ...] = ("none",)
+        repeats = 1
+    else:
+        configs = [
+            # 10^4 tenants × 480 s = 4.8M tenant-seconds
+            ("stream", 4, 2500, 480, 240),
+            # 10^5 tenants × 240 s = 24M tenant-seconds (the ISSUE-7
+            # ≥5× acceptance row, policy="none" isolating the engines)
+            ("stream", 4, 25000, 240, 120),
+        ]
+        policies = ("none", "sdps")
+    rows = []
+    for workload, n_nodes, per_node, duration, ri in configs:
+        ts = n_nodes * per_node * duration
+        for policy in policies:
+            row = {
+                "workload": workload, "n_nodes": n_nodes,
+                "tenants_per_node": per_node, "duration_s": duration,
+                "round_interval": ri, "policy": policy,
+                "tenant_seconds": ts,
+                "devices": len(jax.devices()),
+                "jax_dtype": "float32",
+            }
+            results = {}
+            for engine in ("batched", "jax"):
+                walls = []
+                for _ in range(max(repeats, 1)):
+                    fed = _fleet_fed(workload, n_nodes, per_node,
+                                     duration, ri, policy, engine)
+                    gc.collect()   # keep collector pauses off the wall
+                    t0 = time.perf_counter()
+                    results[engine] = fed.run()
+                    walls.append(time.perf_counter() - t0)
+                row[f"{engine}_wall_s"] = min(walls)
+                row[f"{engine}_ts_per_s"] = ts / min(walls)
+            vb = results["batched"].violation_rate
+            vj = results["jax"].violation_rate
+            if not (math.isfinite(vb) and math.isfinite(vj)):
+                raise AssertionError(
+                    f"jaxscale non-finite VR on {row}: "
+                    f"batched={vb} jax={vj}")
+            if abs(vb - vj) > vr_tol:
+                raise AssertionError(
+                    f"jaxscale VR divergence on {row}: "
+                    f"batched={vb:.4f} jax={vj:.4f} (tol {vr_tol})")
+            row["batched_vr"] = vb
+            row["jax_vr"] = vj
+            row["vr_delta"] = vj - vb
+            row["speedup_jax_vs_batched"] = (row["batched_wall_s"]
+                                             / row["jax_wall_s"])
             rows.append(row)
     return rows
 

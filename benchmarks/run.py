@@ -192,6 +192,23 @@ def main() -> None:
                 f"bitwise={r['bitwise_identical']})")
         _persist_section("fedscale", rows, args.quick)
 
+    if want("jaxscale"):
+        from benchmarks import federation_bench
+        rows = federation_bench.jax_scale_sweep(quick=args.quick)
+        results["jaxscale"] = rows
+        for r in rows:
+            _csv(
+                f"jaxscale/{r['workload']}/{r['n_nodes']}x"
+                f"{r['tenants_per_node']}t/ri{r['round_interval']}/"
+                f"{r['policy']}",
+                r["jax_wall_s"] * 1e6,
+                f"{r['tenant_seconds'] / 1e6:.2f}M t-s: jax "
+                f"{r['jax_ts_per_s'] / 1e6:.2f}M t-s/s vs batched "
+                f"{r['batched_ts_per_s'] / 1e6:.2f}M t-s/s "
+                f"({r['speedup_jax_vs_batched']:.1f}x on "
+                f"{r['devices']}dev, dVR={r['vr_delta'] * 100:+.2f}pp)")
+        _persist_section("jaxscale", rows, args.quick)
+
     if want("ctrlscale"):
         from benchmarks import federation_bench
         rows = federation_bench.control_plane_scale(quick=args.quick)

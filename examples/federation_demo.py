@@ -72,10 +72,11 @@ def main():
     ap.add_argument("--duration", type=int, default=None)
     ap.add_argument("--seed", type=int, default=None)
     ap.add_argument("--engine", default=None,
-                    choices=["scalar", "vectorized", "batched"],
-                    help="execution engine (all three are bitwise "
+                    choices=["scalar", "vectorized", "batched", "jax"],
+                    help="execution engine (the numpy trio is bitwise "
                          "identical; batched steps the whole federation "
-                         "as one matrix per chunk)")
+                         "as one matrix per chunk; jax jit-compiles it "
+                         "for mega-scale fleets, tolerance-equivalent)")
     ap.add_argument("--placement", default=None,
                     choices=["least_loaded", "locality", "price_aware"])
     ap.add_argument("--policy", default=None,

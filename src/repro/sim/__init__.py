@@ -1,6 +1,44 @@
+"""Simulator stack: workloads, nodes, federation, scenarios.
+
+Execution engines (``SimConfig.engine`` / ``Scenario.engine``) dispatch
+through the :mod:`repro.sim.engines` registry. The matrix (rendered
+live by :func:`repro.sim.engines.engine_matrix`, pinned by tests):
+
+========== =========== =============== =============================
+engine     contract    rng scheme      when to use
+========== =========== =============== =============================
+scalar     bitwise     numpy-substream reference semantics; tiny
+                                       fleets, debugging
+vectorized bitwise     numpy-substream default; O(1) numpy calls per
+                                       tenant per chunk
+batched    bitwise     numpy-substream large fleets (10^2-10^4
+                                       tenants); one stacked matrix
+                                       per chunk
+jax        tolerance   counter-jax     mega-scale fleets (10^5+);
+                                       jit+vmap, device sharding
+serving    token-level engine-owned    real LLM engine under the same
+                                       control plane
+========== =========== =============== =============================
+
+* **bitwise** — the three numpy engines realise the identical random
+  trace from per-tenant Generator substreams and evaluate identical
+  float64 expressions, so every downstream number is bitwise equal.
+* **tolerance** — the jax engine draws the same distributions from
+  counter-based threefry streams in float32; violation rates and
+  latency summaries match the trio statistically, within tolerances
+  pinned by tests/test_jax_engine.py (see
+  :mod:`repro.sim.engines.jax_backend` for exactly where and why
+  bitwise breaks).
+* **token-level** — the serving engine replaces the latency model with
+  a real multi-tenant LLM engine; only the control plane is shared.
+"""
 from repro.sim.workload import (FleetBatch, GameWorkload,  # noqa: F401
                                 StreamWorkload, Workload, make_game_fleet,
                                 make_stream_fleet)
+from repro.sim.engines import (ENGINE_BACKENDS, EngineBackend,  # noqa: F401
+                               engine_matrix, engine_names,
+                               register_engine, resolve_engine,
+                               sim_engines)
 from repro.sim.edgesim import (ENGINES, EdgeNodeSim,  # noqa: F401
                                FleetStepper, SimConfig, SimResult,
                                tenant_stream)

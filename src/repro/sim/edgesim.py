@@ -7,7 +7,8 @@ terminated tenants are serviced "from the Cloud" with WAN latency added —
 requests keep flowing, as in the paper (users are redirected, not
 dropped).
 
-Three execution engines share one trace:
+Four execution engines (see :mod:`repro.sim.engines` for the backend
+registry they dispatch through):
 
 * ``scalar`` — the reference per-second, per-tenant Python loop;
 * ``vectorized`` (default) — batched NumPy over whole chunks, one pass
@@ -16,12 +17,16 @@ Three execution engines share one trace:
   (tenants × seconds) matrix via :class:`~repro.sim.workload.FleetBatch`
   (and a federation's chunk as one stacked (nodes·tenants × seconds)
   step, see :class:`FleetStepper`), collapsing the per-tenant Python
-  loops to a handful of NumPy calls per chunk.
+  loops to a handful of NumPy calls per chunk;
+* ``jax`` — mega-scale fleets: the fleet matrix math jit-compiled and
+  device-sharded with counter-based RNG streams
+  (:mod:`repro.sim.engines.jax_backend` — statistically, not bitwise,
+  equivalent to the trio below).
 
-All engines draw the identical random trace per chunk (per-tenant
-arrival counts + jitter, from per-tenant RNG substreams — the batched
-engine never merges draws across tenants, it only batches the
-deterministic math between them) and evaluate the identical
+The first three engines draw the identical random trace per chunk
+(per-tenant arrival counts + jitter, from per-tenant RNG substreams —
+the batched engine never merges draws across tenants, it only batches
+the deterministic math between them) and evaluate the identical
 floating-point expressions element for element, so their violation
 rates, per-minute timelines, and termination lists are bitwise
 identical — only wall-clock differs.
@@ -37,35 +42,23 @@ measurements of Fig. 2 (controller wall-clock per round).
 """
 from __future__ import annotations
 
-import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core import (DyverseController, NodeCapacity, PricingModel,
                         Quota, ResourceUnit, TenantSpec)
+from repro.sim.engines import (resolve_engine,  # noqa: F401  (re-export)
+                               sim_engines, tenant_stream)
 from repro.sim.workload import FleetBatch, Workload
 
 WAN_EXTRA_LATENCY = 0.12     # s: Cloud round-trip penalty after eviction
 WAN_BW_MBPS = 20.0           # migration bandwidth Edge→Cloud
 CLOUD_UNITS = 10 ** 6        # effectively unconstrained Cloud capacity
 
-ENGINES = ("scalar", "vectorized", "batched")
-
-
-def tenant_stream(seed: int, name: str):
-    """Per-tenant RNG substreams, stable across runs and processes
-    (``hash()`` is salted per process, so key on crc32 instead).
-
-    Two independent generators per tenant — one for arrival counts, one
-    for latency jitter. Keeping the draw kinds on separate streams is
-    what lets the scalar engine draw second-by-second and the vectorized
-    engine draw chunk-by-chunk while realising the same values: numpy's
-    Generator consumes its bitstream identically for one size-N draw and
-    for N sequential draws, as long as no other draw kind interleaves."""
-    key = zlib.crc32(name.encode())
-    return (np.random.default_rng((seed, key, 0)),
-            np.random.default_rng((seed, key, 1)))
+# the node-capable engines registered at import time (compat constant;
+# the live list is repro.sim.engines.sim_engines())
+ENGINES = sim_engines()
 
 
 @dataclass
@@ -79,11 +72,15 @@ class SimConfig:
     donation_fraction: float = 0.3    # tenants willing to donate
     pricing: PricingModel = PricingModel.HYBRID
     normalize_factors: bool = False  # beyond-paper mode (see core.priority)
-    engine: str = "vectorized"        # "scalar" | "vectorized" | "batched"
-    jit_scale: bool = False           # batched engine: jax-jit the latency
-    #                                   scale (fast, NOT bitwise-guaranteed)
+    engine: str = "vectorized"        # any node-capable engine in ENGINES
+    jit_scale: bool = False           # DEPRECATED — alias for
+    #                                   backend_options={"jit_scale": True}
+    #                                   (shimmed in __post_init__, warns once)
     control_plane: str = "array"      # "array" | "reference" controller path
     rng_workers: int = 2              # batched engine: jitter-draw pool size
+    # engine-specific knobs, interpreted by the resolved backend:
+    # batched: {"jit_scale": bool}; jax: {"shard": bool, "pallas": bool}
+    backend_options: dict = field(default_factory=dict)
     # ScalingPolicy seam (repro.core.forecast): "reactive" keeps the
     # paper's Procedure-2 path bitwise-identical; "proactive" scales on
     # the forecast before violations land; "hybrid" falls back to
@@ -97,6 +94,23 @@ class SimConfig:
     wan_extra_latency: float = WAN_EXTRA_LATENCY
     unit_price: float = 1.0           # per-uR price (price-aware placement)
     seed: int = 0
+
+    def __post_init__(self):
+        if self.jit_scale:
+            if not _JIT_SCALE_WARNED:
+                import warnings
+
+                warnings.warn(
+                    "SimConfig.jit_scale is deprecated; pass "
+                    "backend_options={'jit_scale': True} instead",
+                    DeprecationWarning, stacklevel=3)
+                _JIT_SCALE_WARNED.append(True)
+            if "jit_scale" not in self.backend_options:
+                self.backend_options = {**self.backend_options,
+                                        "jit_scale": True}
+
+
+_JIT_SCALE_WARNED: list = []
 
 
 @dataclass
@@ -162,8 +176,11 @@ class EdgeNodeSim:
 
     def __init__(self, workloads: list[Workload], cfg: SimConfig,
                  name: str = "edge0"):
-        if cfg.engine not in ENGINES:
-            raise ValueError(f"engine {cfg.engine!r} not in {ENGINES}")
+        self.backend = resolve_engine(cfg.engine)
+        if not self.backend.node_capable:
+            raise ValueError(
+                f"engine {cfg.engine!r} is not node-capable; valid "
+                f"SimConfig engines: {sim_engines()}")
         self.cfg = cfg
         self.name = name
         self.rng = np.random.default_rng(cfg.seed)
@@ -226,7 +243,7 @@ class EdgeNodeSim:
         self.workloads[wl.name] = wl
         self.tenant_rngs[wl.name] = (
             tenant_rng if tenant_rng is not None
-            else tenant_stream(self.cfg.seed, wl.name))
+            else self.backend.tenant_rng(self.cfg.seed, wl.name))
         self._fleet_epoch += 1
         res = self.ctrl.admit(spec)
         if not res.admitted:
@@ -244,7 +261,7 @@ class EdgeNodeSim:
         self.workloads[wl.name] = wl
         self.tenant_rngs[wl.name] = (
             tenant_rng if tenant_rng is not None
-            else tenant_stream(self.cfg.seed, wl.name))
+            else self.backend.tenant_rng(self.cfg.seed, wl.name))
         self._fleet_epoch += 1
         self.evicted.add(wl.name)
 
@@ -265,25 +282,22 @@ class EdgeNodeSim:
     def step_chunk(self, t0: int, t1: int) -> None:
         """Simulate seconds [t0, t1); no controller round in between.
 
-        The scalar engine runs the per-second, per-tenant Python inner
-        loop (per-second RNG draws, latency evaluation and SLO counting,
-        as in the original second-stepped simulator); the vectorized
-        engine realises the same trace with O(1) NumPy calls per tenant;
-        the batched engine with O(1) NumPy calls per *fleet* (one
+        Dispatches through the resolved engine backend
+        (:meth:`repro.sim.engines.base.EngineBackend.step_node`): the
+        scalar engine runs the per-second, per-tenant Python inner loop
+        (per-second RNG draws, latency evaluation and SLO counting, as
+        in the original second-stepped simulator); the vectorized engine
+        realises the same trace with O(1) NumPy calls per tenant; the
+        batched engine with O(1) NumPy calls per *fleet* (one
         (tenants × seconds) matrix). Because each tenant's arrival and
         jitter draws live on their own Generators, the three call
         patterns consume the bitstreams identically, and because all
-        engines feed the Monitor identical per-chunk values, every
+        three feed the Monitor identical per-chunk values, every
         downstream quantity — violation rates, per-minute timelines,
-        controller decisions — is bitwise equal."""
-        if self.cfg.engine == "scalar":
-            self._step_chunk_scalar(t0, t1)
-        elif self.cfg.engine == "batched":
-            if self._stepper is None:
-                self._stepper = FleetStepper([self])
-            self._stepper.step(t0, t1)
-        else:
-            self._step_chunk_vectorized(t0, t1)
+        controller decisions — is bitwise equal. The jax engine matches
+        them statistically, not bitwise (see
+        :mod:`repro.sim.engines.jax_backend`)."""
+        self.backend.step_node(self, t0, t1)
 
     def _tenant_units(self, name: str) -> int:
         if name in self.evicted:
@@ -472,7 +486,8 @@ class FleetStepper:
     def __init__(self, nodes: list[EdgeNodeSim]):
         self.nodes = nodes
         self._epochs: tuple | None = None
-        self._use_jax = any(n.cfg.jit_scale for n in nodes)
+        self._use_jax = any(n.cfg.backend_options.get("jit_scale", False)
+                            for n in nodes)
         # overlap needs spare cores: workers beyond cores−1 just fight
         # the main thread for the GIL (measurably slower on 2-core CI)
         import os
@@ -494,11 +509,7 @@ class FleetStepper:
         self._entries = entries
         self._node_slices = slices
         self._batch = FleetBatch([wl for _, _, wl in entries])
-        self._arr_rngs = [node.tenant_rngs[name][0]
-                          for node, name, _ in entries]
-        self._batch.bind_rngs(self._arr_rngs)
-        self._jit_rngs = [node.tenant_rngs[name][1]
-                          for node, name, _ in entries]
+        self._gather_rngs(entries)
         # membership-stable per-tenant metadata, gathered once per epoch
         # (same python products the other engines compute per chunk)
         self._slos = np.array([node.cfg.slo_scale * wl.base_latency
@@ -518,6 +529,17 @@ class FleetStepper:
              for node, name, _ in entries], np.int64)
         self._evict_key: tuple | None = None
         self._evicted_arr: np.ndarray | None = None
+
+    def _gather_rngs(self, entries: list) -> None:
+        """Per-tenant numpy substream gather (arrival + jitter
+        Generators). Counter-RNG engines override this with a no-op —
+        their draws are keyed, not stateful, so there is nothing to
+        collect."""
+        self._arr_rngs = [node.tenant_rngs[name][0]
+                          for node, name, _ in entries]
+        self._batch.bind_rngs(self._arr_rngs)
+        self._jit_rngs = [node.tenant_rngs[name][1]
+                          for node, name, _ in entries]
 
     def _evicted_mask(self) -> np.ndarray:
         """(T,) bool eviction mask. Within a fleet epoch the evicted sets
@@ -637,24 +659,8 @@ class FleetStepper:
         # the hosting node's own Cloud-link latency)
         for i in np.flatnonzero(evicted):
             lat[starts[i]:starts[i + 1]] += self._wan[i]
-        # per-node per-second tallies over Edge-hosted rows only
-        # (integer sums — order-independent, exact)
-        live = ~evicted
-        if live.all():
-            counts_live, viol_live = counts, viol_ts
-        else:
-            counts_live = counts * live[:, None]
-            viol_live = viol_ts * live[:, None]
-        for node, sl in zip(self.nodes, self._node_slices):
-            if sl.stop > sl.start:
-                node._req_s[t0:t1] += counts_live[sl].sum(axis=0)
-                node._viol_s[t0:t1] += viol_live[sl].sum(axis=0)
-            seg = slice(starts[sl.start], starts[sl.stop])
-            if seg.stop > seg.start:
-                node._all_lat.append(lat[seg])
-                node._all_slo.append(slo_rep[seg])
         starts_l = starts.tolist()
-        viol_l = viol_t.tolist()
+        live = ~evicted
         # per-tenant latency sums, feeding the Monitors: segments of ≤2
         # requests are the elements themselves (bitwise equal to the
         # slice .sum() — so fine-round_interval chunks vectorise fully);
@@ -670,19 +676,65 @@ class FleetStepper:
             lat_sums[sel] += lat[p[sel] + 1]
             for i in np.flatnonzero(~small & live).tolist():
                 lat_sums[i] = lat[starts_l[i]:starts_l[i + 1]].sum()
+        self._feed_nodes(t0, t1, counts, totals, starts, lat, slo_rep,
+                         viol_ts, viol_t, lat_sums, evicted)
+
+    def _feed_nodes(self, t0: int, t1: int, counts: np.ndarray,
+                    totals: np.ndarray, starts: np.ndarray,
+                    lat: np.ndarray, slo_rep: np.ndarray,
+                    viol_ts: np.ndarray, viol_t: np.ndarray,
+                    lat_sums: np.ndarray, evicted: np.ndarray,
+                    users_arr: np.ndarray | None = None) -> None:
+        """Accounting tail shared with the jax stepper: per-node
+        per-second tallies, latency-distribution appends, and the
+        Monitor feeds. Pure bookkeeping over already-final arrays — no
+        RNG, no new float math — so the batched engine stays bitwise
+        and engine subclasses reuse it unchanged. ``users_arr`` is an
+        optional per-row user-count override; by default ``users()`` is
+        re-read every chunk, like the other engines do (a subclass may
+        report a time-varying user count)."""
+        entries = self._entries
+        live = ~evicted
+        # per-node per-second tallies over Edge-hosted rows only
+        # (integer sums — order-independent, exact)
+        if live.all():
+            counts_live, viol_live = counts, viol_ts
+        else:
+            counts_live = counts * live[:, None]
+            viol_live = viol_ts * live[:, None]
+        for node, sl in zip(self.nodes, self._node_slices):
+            if sl.stop > sl.start:
+                node._req_s[t0:t1] += counts_live[sl].sum(axis=0)
+                node._viol_s[t0:t1] += viol_live[sl].sum(axis=0)
+            seg = slice(starts[sl.start], starts[sl.stop])
+            if seg.stop > seg.start:
+                node._all_lat.append(lat[seg])
+                node._all_slo.append(slo_rep[seg])
+        totals_l = totals.tolist()
+        viol_l = viol_t.tolist()
+        all_live = bool(live.all())
         for ni, (node, sl) in enumerate(zip(self.nodes, self._node_slices)):
             if sl.stop == sl.start:
+                continue
+            if all_live and self._node_array_feed[ni]:
+                # no evicted rows → the node's rows are one contiguous
+                # slice: feed views instead of six gather copies
+                users = (users_arr[sl] if users_arr is not None
+                         else np.array([wl.users() for _, _, wl
+                                        in entries[sl]], np.int64))
+                node.ctrl.monitor.add_chunk(
+                    self._slot_ids[sl], totals[sl], lat_sums[sl],
+                    viol_t[sl], totals[sl] * self._data_mb_arr[sl], users)
                 continue
             rows = np.flatnonzero(live[sl]) + sl.start
             if rows.size == 0:
                 continue
             mon = node.ctrl.monitor
             rows_l = rows.tolist()
-            # users() is re-read every chunk, like the other engines do —
-            # a subclass may report a time-varying user count
             if self._node_array_feed[ni]:
-                users = np.array([entries[i][2].users() for i in rows_l],
-                                 np.int64)
+                users = (users_arr[rows] if users_arr is not None
+                         else np.array([entries[i][2].users()
+                                        for i in rows_l], np.int64))
                 mon.add_chunk(self._slot_ids[rows], totals[rows],
                               lat_sums[rows], viol_t[rows],
                               totals[rows] * self._data_mb_arr[rows], users)
@@ -691,4 +743,6 @@ class FleetStepper:
                     _, name, wl = entries[i]
                     mon.record_batch_sums(
                         name, totals_l[i], float(lat_sums[i]), viol_l[i],
-                        totals_l[i] * self._data_mb[i], users=wl.users())
+                        totals_l[i] * self._data_mb[i],
+                        users=(int(users_arr[i]) if users_arr is not None
+                               else wl.users()))

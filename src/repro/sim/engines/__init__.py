@@ -1,0 +1,25 @@
+"""Engine backends: protocol, registry, and the built-in engines.
+
+See :mod:`repro.sim.engines.base` for the :class:`EngineBackend`
+protocol. The four simulator engines plus the serving engine register
+here; the jax engine registers lazily (its module imports jax) so
+``import repro.sim`` stays accelerator-free until an ``engine="jax"``
+run actually resolves it."""
+from repro.sim.engines.base import (ENGINE_BACKENDS,  # noqa: F401
+                                    EngineBackend, LazyEntry,
+                                    engine_matrix, engine_names,
+                                    register_engine, resolve_engine,
+                                    sim_engines, tenant_stream)
+from repro.sim.engines.numpy_backends import (BatchedBackend,  # noqa: F401
+                                              ScalarBackend,
+                                              VectorizedBackend)
+from repro.sim.engines.serving_backend import ServingBackend  # noqa: F401
+
+register_engine(ScalarBackend())
+register_engine(VectorizedBackend())
+register_engine(BatchedBackend())
+register_engine(LazyEntry(
+    "jax", "repro.sim.engines.jax_backend", "JAX_BACKEND",
+    contract="tolerance", rng_scheme="counter-jax",
+    when_to_use="mega-scale fleets (10^5+); jit+vmap, device sharding"))
+register_engine(ServingBackend())

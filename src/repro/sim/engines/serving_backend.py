@@ -1,0 +1,53 @@
+"""``engine="serving"``: the REAL multi-tenant LLM engine
+(:mod:`repro.serving.federation`) behind the backend registry.
+
+Not node-capable: a serving run owns its own node objects (real engines
+with decode slots and KV pools), so ``EdgeNodeSim`` never steps it —
+the backend exists to fold the scenario-level special cases (spec
+validation, smoke sizing, reported duration, run dispatch) into the
+same seam every other engine uses. Heavy imports stay inside the
+methods: validating or tabulating a serving scenario is jax-free, only
+actually running one pulls the engine in."""
+from __future__ import annotations
+
+from repro.sim.engines.base import EngineBackend
+
+
+class ServingBackend(EngineBackend):
+    name = "serving"
+    contract = "token-level"
+    rng_scheme = "engine-owned"
+    node_capable = False
+    when_to_use = "real LLM engine under the same control plane"
+
+    def tenant_rng(self, seed: int, name: str) -> tuple:
+        raise NotImplementedError(
+            "engine='serving' owns its request streams; it has no "
+            "per-tenant simulator RNG")
+
+    def validate_scenario(self, scenario) -> None:
+        if scenario.serving is None:
+            raise ValueError(f"scenario {scenario.name!r} has "
+                             f"engine='serving' but no ServingSpec")
+        if tuple(scenario.scaling_policies) != ("reactive",):
+            raise ValueError("engine='serving' supports only the "
+                             "reactive scaling policy for now")
+        for wl in scenario.fleet.build():
+            scenario.serving.class_for(wl.name)   # raises on no match
+
+    def scenario_duration(self, scenario) -> float:
+        # serving cadence lives in the ServingSpec's virtual clock
+        return scenario.serving.duration_virtual_s
+
+    def quick_scenario(self, scenario, round_interval: int, rounds: int):
+        # rounds × steps × step_dt is already smoke-sized
+        return scenario
+
+    def run_federation(self, fleet, cfg, scenario=None):
+        # lazy: pulls jax only when a serving scenario actually runs
+        from repro.serving.federation import ServingFederation
+
+        if scenario is None or scenario.serving is None:
+            raise ValueError("engine='serving' needs a Scenario with a "
+                             "ServingSpec")
+        return ServingFederation(fleet, cfg, scenario.serving).run()

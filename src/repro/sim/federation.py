@@ -44,8 +44,8 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro.core import POLICIES, PricingModel, TenantSpec
-from repro.sim.edgesim import (WAN_EXTRA_LATENCY, EdgeNodeSim, FleetStepper,
-                               SimConfig, SimResult, tenant_stream)
+from repro.sim.edgesim import (WAN_EXTRA_LATENCY, EdgeNodeSim,
+                               SimConfig, SimResult, resolve_engine)
 from repro.sim.workload import Workload
 
 # the no-scaling baseline + the four priority policies (Figs. 3–5 sweeps)
@@ -151,6 +151,8 @@ class FederationConfig:
     engine: str = "vectorized"
     control_plane: str = "array"       # "array" | "reference" (per node)
     rng_workers: int = 2               # batched engine: jitter-draw pool
+    # engine-specific knobs, forwarded into every node's SimConfig
+    backend_options: dict = field(default_factory=dict)
     # ScalingPolicy seam (repro.core.forecast), applied on every node
     scaling_policy: str = "reactive"   # "reactive"|"proactive"|"hybrid"
     forecaster: str = "ewma"           # FORECASTERS name
@@ -194,6 +196,7 @@ class FederationConfig:
             engine=self.engine,
             control_plane=self.control_plane,
             rng_workers=self.rng_workers,
+            backend_options=dict(self.backend_options),
             scaling_policy=self.scaling_policy,
             forecaster=self.forecaster,
             forecast_window=self.forecast_window,
@@ -429,11 +432,11 @@ class EdgeFederation:
     # ---------------------------------------------------------- execution
     def run(self) -> FederationResult:
         cfg = self.cfg
-        # batched engine: all nodes advance as ONE stacked
-        # (nodes·tenants × seconds) step per chunk; the stepper's caches
-        # follow re-placement via the nodes' fleet epochs
-        stepper = (FleetStepper(self.nodes)
-                   if cfg.engine == "batched" else None)
+        # fleet-capable engines (batched, jax) advance all nodes as ONE
+        # stacked (nodes·tenants × seconds) step per chunk; the
+        # stepper's caches follow re-placement via the nodes' fleet
+        # epochs. Per-node engines return None and step node by node.
+        stepper = resolve_engine(cfg.engine).make_stepper(self.nodes)
         t = 0
         while t < cfg.duration_s:
             t1 = min(t + cfg.round_interval, cfg.duration_s)

@@ -97,8 +97,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import PricingModel
-from repro.sim.edgesim import ENGINES, WAN_EXTRA_LATENCY
-from repro.sim.federation import (PLACEMENTS, SWEEP_POLICIES, EdgeFederation,
+from repro.sim.edgesim import WAN_EXTRA_LATENCY, resolve_engine
+from repro.sim.federation import (PLACEMENTS, SWEEP_POLICIES,
                                   FederationConfig, FederationResult,
                                   PlacementEvent, paper_capacity_units)
 from repro.serving.spec import ServingClassSpec, ServingSpec
@@ -258,6 +258,9 @@ class Scenario:
     engine: str = "batched"
     control_plane: str = "array"
     rng_workers: int = 2
+    # engine-specific knobs, forwarded into every node's SimConfig
+    # (batched: {"jit_scale": bool}; jax: {"shard": bool, "pallas": bool})
+    backend_options: dict = field(default_factory=dict)
     seed: int = 7
     description: str = ""
     # engine="serving" only: the real-engine shape (models, arrival
@@ -281,19 +284,9 @@ class Scenario:
         if self.forecaster not in FORECASTERS:
             raise ValueError(f"forecaster {self.forecaster!r} not in "
                              f"{sorted(FORECASTERS)}")
-        if self.engine == "serving":
-            # the real multi-tenant LLM engine under the same federation
-            # control plane (repro.serving.federation)
-            if self.serving is None:
-                raise ValueError(f"scenario {self.name!r} has "
-                                 f"engine='serving' but no ServingSpec")
-            if tuple(self.scaling_policies) != ("reactive",):
-                raise ValueError("engine='serving' supports only the "
-                                 "reactive scaling policy for now")
-            for wl in self.fleet.build():
-                self.serving.class_for(wl.name)   # raises on no match
-        elif self.engine not in ENGINES:
-            raise ValueError(f"engine {self.engine!r} not in {ENGINES}")
+        # engine-specific checks live on the backend (the former
+        # engine == "serving" special case folded into the registry)
+        resolve_engine(self.engine).validate_scenario(self)
         node_names = {f"edge{i}" for i in range(self.topology.n_nodes)}
         for f in self.faults.node_failures:
             for nm in f.node_names:
@@ -326,6 +319,7 @@ class Scenario:
             engine=self.engine,
             control_plane=self.control_plane,
             rng_workers=self.rng_workers,
+            backend_options=dict(self.backend_options),
             scaling_policy=(scaling_policy if scaling_policy is not None
                             else self.scaling_policies[0]),
             forecaster=self.forecaster,
@@ -342,14 +336,19 @@ class Scenario:
 
     def quick(self, round_interval: int = 60,
               rounds: int = 4) -> "Scenario":
-        """A short-duration variant for smoke runs: the cadence shrinks
-        to ``rounds`` intervals of ``round_interval`` seconds and fault
-        times rescale proportionally (clamped inside the run so a
-        mid-session failure stays mid-session)."""
-        if self.engine == "serving":
-            # serving cadence lives in the ServingSpec's virtual clock
-            # (rounds × steps × step_dt) and is already smoke-sized
-            return self
+        """A short-duration variant for smoke runs: dispatches to the
+        engine backend — simulator engines rescale the cadence to
+        ``rounds`` intervals of ``round_interval`` seconds
+        (:meth:`_quick_rescale`); the serving engine's cadence lives in
+        its ServingSpec virtual clock and is already smoke-sized."""
+        return resolve_engine(self.engine).quick_scenario(
+            self, round_interval, rounds)
+
+    def _quick_rescale(self, round_interval: int,
+                       rounds: int) -> "Scenario":
+        """The simulator-engine ``quick`` behaviour: shrink the cadence
+        and rescale fault times proportionally (clamped inside the run
+        so a mid-session failure stays mid-session)."""
         ri = min(self.round_interval, round_interval)
         dur = rounds * ri
         if dur >= self.duration_s:
@@ -405,8 +404,7 @@ class ScenarioResult:
         cap, caps = sc.topology.resolve_capacity(sc.fleet.size)
         cap_s = ("[" + " ".join(str(c) for c in caps) + "]u" if caps
                  else f"{cap}u×{sc.topology.n_nodes}")
-        dur = (sc.serving.duration_virtual_s if sc.engine == "serving"
-               else sc.duration_s)
+        dur = resolve_engine(sc.engine).scenario_duration(sc)
         lines = [
             f"scenario {self.name}: {sc.topology.n_nodes} nodes ({cap_s}), "
             f"{sc.fleet.size} tenants, {dur:g}s session, "
@@ -494,12 +492,8 @@ def run_scenario(scenario: Scenario | str, *,
             fleet = scenario.fleet.build()
             cfg = scenario.federation_config(policy, spol)
             t0 = time.perf_counter()
-            if scenario.engine == "serving":
-                # lazy: pulls jax only when a serving scenario runs
-                from repro.serving.federation import ServingFederation
-                res = ServingFederation(fleet, cfg, scenario.serving).run()
-            else:
-                res = EdgeFederation(fleet, cfg).run()
+            res = resolve_engine(scenario.engine).run_federation(
+                fleet, cfg, scenario)
             wall = time.perf_counter() - t0
             over = res.mean_round_overhead_s
             out.results[key] = res

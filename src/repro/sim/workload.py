@@ -73,6 +73,13 @@ class Workload:
     # classes whose demand_rates never varies with t declare it here, so
     # FleetBatch may cache their (G, 1) demand column across chunks
     demand_time_invariant = False
+    #: True when ``arrival_counts`` consumes no randomness (a closed-form
+    #: schedule): rate-based engines (jax) can then reuse
+    #: ``batch_arrival_counts`` with ``rngs=[None]*G``. RNG-backed
+    #: classes instead expose their Poisson rate via ``batch_arrival_lam``
+    #: (see :class:`GameWorkload`) so such engines can draw the same
+    #: distribution from their own streams.
+    arrival_rng_free = False
 
     def users(self) -> int:
         return 1
@@ -198,6 +205,15 @@ class GameWorkload(Workload):
         return cls._batch_lam(fleet, t0, t1) * wpr
 
     @classmethod
+    def batch_arrival_lam(cls, fleet: list["GameWorkload"], t0: int,
+                          t1: int) -> np.ndarray:
+        """Public declaration that arrivals are Poisson(λ) with this
+        (len(fleet), t1-t0) rate matrix: rate-based engines (jax) draw
+        Poisson counts from their own counter streams at exactly these
+        rates instead of consuming the numpy substreams."""
+        return cls._batch_lam(fleet, t0, t1)
+
+    @classmethod
     def batch_arrival_counts(cls, fleet: list["GameWorkload"], rngs: list,
                              t0: int, t1: int) -> np.ndarray:
         lam = cls._batch_lam(fleet, t0, t1)
@@ -218,6 +234,8 @@ class StreamWorkload(Workload):
 
     fps: float = 0.5
     demand_time_invariant = True           # fps never varies with t
+    arrival_rng_free = True                # closed-form frame schedule
+    _frames_scratch = None                 # f64 scratch for out= callers
 
     def __post_init__(self):
         self.data_per_request_mb = 0.6     # one grey-scale frame
@@ -246,15 +264,32 @@ class StreamWorkload(Workload):
 
     @classmethod
     def batch_arrival_counts(cls, fleet: list["StreamWorkload"], rngs: list,
-                             t0: int, t1: int) -> np.ndarray:
+                             t0: int, t1: int,
+                             out: np.ndarray | None = None) -> np.ndarray:
         # deterministic frame schedule — consumes no randomness, exactly
         # like the per-instance form (``rngs`` stay untouched); the floor
-        # values are exact small integers, so casting before the diff
-        # yields the same counts as diffing in float
+        # values are exact small integers, so the f64 difference is exact
+        # and the int64 cast yields the same counts as diffing integers.
+        # ``out`` lets hot callers (the jax engine) reuse one result
+        # buffer per chunk instead of re-faulting ~100 MB pages at 10⁵
+        # tenants.
         fps = np.array([w.fps for w in fleet], np.float64)[:, None]
-        frames = np.floor(
-            fps * np.arange(t0, t1 + 1, dtype=np.float64)).astype(np.int64)
-        return frames[:, 1:] - frames[:, :-1]
+        t = np.arange(t0, t1 + 1, dtype=np.float64)
+        if out is None:
+            frames = fps * t
+            out = np.empty((len(fleet), t1 - t0), np.int64)
+        else:
+            # buffer-reusing callers get a reused f64 scratch too (same
+            # single-threaded hot path, so one slot suffices)
+            frames = cls._frames_scratch
+            if frames is None or frames.shape != (len(fleet), t.size):
+                frames = np.empty((len(fleet), t.size), np.float64)
+                StreamWorkload._frames_scratch = frames
+            np.multiply(fps, t, out=frames)
+        np.floor(frames, out=frames)
+        np.subtract(frames[:, 1:], frames[:, :-1], out=out,
+                    casting="unsafe")
+        return out
 
 
 class FleetBatch:

@@ -114,7 +114,7 @@ def test_federation_engines_match_bitwise(mixed):
 
 
 def test_engines_constant_is_exhaustive():
-    assert set(ENGINES) == {"scalar", "vectorized", "batched"}
+    assert set(ENGINES) == {"scalar", "vectorized", "batched", "jax"}
 
 
 def test_unknown_engine_rejected():
