@@ -470,3 +470,62 @@ def scenario_walls(quick: bool = False, repeats: int = 3) -> list[dict]:
             "wall_s": min(walls),
         })
     return rows
+
+
+# ------------------------------------------------------------ resilience
+CHAOS_SCENARIOS = ("flapping_node", "degraded_node_midrun",
+                   "wan_spike_storm", "serving_timeout_retry")
+
+
+def resilience_sweep(quick: bool = False, repeats: int = 2) -> list[dict]:
+    """``resilience``: the four chaos scenarios (node flapping, mid-run
+    capacity degradation, WAN latency storm, serving timeout/retry with
+    load shedding) under every policy they declare, reporting VR, the
+    VR delta vs that scenario's ``none`` baseline (negative = dynamic
+    scaling absorbs the fault), recovery re-placements, Cloud fallbacks
+    and shed counts. Raises on a non-finite VR or a request-conservation
+    violation, so a broken fault path fails the CI ``--quick`` smoke
+    instead of persisting garbage (BENCH_resilience.json)."""
+    if quick:
+        repeats = 1
+    rows = []
+    for name in CHAOS_SCENARIOS:
+        sc = SCENARIOS[name]
+        base_vr: float | None = None
+        for pol in sc.policies:
+            walls, res = [], None
+            for _ in range(max(repeats, 1)):
+                t0 = time.perf_counter()
+                res = run_scenario(sc, policies=(pol,), quick=quick)
+                walls.append(time.perf_counter() - t0)
+            oc = res.outcomes[pol]
+            if not math.isfinite(oc.violation_rate):
+                raise AssertionError(
+                    f"{name}/{pol}: non-finite VR {oc.violation_rate}")
+            if oc.requests_conserved is False:
+                raise AssertionError(
+                    f"{name}/{pol}: request conservation violated")
+            if pol == "none":
+                base_vr = oc.violation_rate
+            fr = res.results[pol]
+            rows.append({
+                "scenario": name,
+                "engine": sc.engine,
+                "policy": pol,
+                "n_nodes": res.scenario.topology.n_nodes,
+                "tenants": res.scenario.fleet.size,
+                "duration_s": res.scenario.duration_s,
+                "violation_rate": oc.violation_rate,
+                "vr_delta_vs_none": (oc.violation_rate - base_vr
+                                     if base_vr is not None else 0.0),
+                "nonviolated_latency_s": _nonviolated_latency_s(fr),
+                "failed_nodes": len(fr.failed_nodes),
+                "recovered_nodes": len(fr.recovered_nodes),
+                "recovered_tenants": oc.recovered,
+                "replaced": oc.replaced,
+                "cloud": oc.cloud,
+                "shed": oc.shed,
+                "requests_conserved": oc.requests_conserved,
+                "wall_s": min(walls),
+            })
+    return rows

@@ -254,6 +254,21 @@ def main() -> None:
                 f"[{r['forecaster']}]")
         _persist_section("forecast", rows, args.quick)
 
+    if want("resilience"):
+        from benchmarks import federation_bench
+        rows = federation_bench.resilience_sweep(quick=args.quick)
+        results["resilience"] = rows
+        for r in rows:
+            _csv(
+                f"resilience/{r['scenario']}/{r['policy']}",
+                r["wall_s"] * 1e6,
+                f"VR={r['violation_rate'] * 100:.2f}% "
+                f"(Δ vs none {r['vr_delta_vs_none'] * 100:+.2f}pp) "
+                f"recovered={r['recovered_tenants']} "
+                f"cloud={r['cloud']} shed={r['shed']} "
+                f"conserved={r['requests_conserved']}")
+        _persist_section("resilience", rows, args.quick)
+
     if want("roofline"):
         from benchmarks.roofline_report import roofline_table
         rows = roofline_table()

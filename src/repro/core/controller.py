@@ -853,6 +853,30 @@ class DyverseController:
         report.terminated.append(name)
         report.actions.append(RoundAction(name, Decision.TERMINATE))
 
+    def resize_capacity(self, units: int) -> list[str]:
+        """Fault-injection hook (NodeDegradation): resize the node to
+        ``units`` uR and, if the surviving capacity no longer covers the
+        allocated quotas, run a Procedure-3 contraction cascade —
+        terminate lowest-(priority, name) tenants until FR is
+        non-negative again. Mirrors Procedure 2's eviction order, so it
+        is deterministic and identical on both control planes (priority
+        columns and registry priorities are pinned bitwise). Returns the
+        terminated tenant names so a federation can re-place them as
+        refugees."""
+        q = Quota(0, 0).add_units(units, self.pool.uR)
+        self.pool.resize(NodeCapacity(slots=q.slots, pages=q.pages))
+        report = RoundReport(policy=self.policy)
+        while True:
+            f = self.pool.free
+            if f.slots >= 0 and f.pages >= 0:
+                break
+            victim = self._lowest_priority_victim(exclude="")
+            if victim is None:       # nothing left to evict
+                break
+            self._terminate(victim, report, reason="capacity degradation")
+        self.pool.check_invariants()
+        return report.terminated
+
     def release_tenant(self, name: str) -> TenantState:
         """Federation hook: detach a tenant WITHOUT Procedure 3's penalty
         accounting — used when the hosting *node* disappears (fault

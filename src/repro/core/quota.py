@@ -136,6 +136,15 @@ class ResourcePool:
         self._mutations += 1
         return new.copy()
 
+    def resize(self, capacity: NodeCapacity) -> None:
+        """Replace the node capacity (fault injection: degradation /
+        restoration). Allocations are untouched — the pool may come out
+        overcommitted (negative FR), which ``check_invariants`` reports;
+        the controller's contraction cascade must evict back to a
+        feasible allocation before the next round check."""
+        self.capacity = capacity
+        self._mutations += 1
+
     def release(self, tenant: str) -> Quota:
         q = self._alloc.pop(tenant)
         self._units.pop(tenant, None)

@@ -188,8 +188,9 @@ class MultiTenantEngine:
     def step(self) -> None:
         for name in list(self.tenants):
             rt = self.tenants[name]
-            # admit new requests within quota and prefill them
-            for rs in self.sched.admit_waiting(name):
+            # admit new requests within quota and prefill them (requests
+            # inside a retry backoff window stay queued until not_before)
+            for rs in self.sched.admit_waiting(name, self.clock()):
                 slot = rt.free_slot()
                 if slot < 0:
                     # shouldn't happen (slots quota ≤ slot_cap) but be safe

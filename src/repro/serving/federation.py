@@ -44,6 +44,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import TenantSpec
+from repro.serving.request import Phase
 from repro.serving.spec import (ServingClassSpec, ServingSpec,  # noqa: F401
                                 VirtualClock)
 from repro.sim.edgesim import WAN_EXTRA_LATENCY, SimResult
@@ -72,6 +73,7 @@ class ServingNode:
         self.name = name
         self.cfg = link
         self.spec = spec
+        self.capacity_units = capacity_units
         self.engine = MultiTenantEngine(EngineConfig(
             page_size=spec.page_size,
             slot_cap=spec.slot_cap,
@@ -85,6 +87,10 @@ class ServingNode:
         # cloud-tier request samples accounted on this node (WAN paid)
         self.cloud_lats: list[float] = []
         self.cloud_slos: list[float] = []
+        # load-shed request samples (graceful degradation): counted as
+        # SLO violations, never silently dropped
+        self.shed_lats: list[float] = []
+        self.shed_slos: list[float] = []
         # collected RoundReports (overhead + action streams)
         self.reports: list = []
 
@@ -97,12 +103,17 @@ class ServingNode:
         self.cloud_lats.append(latency)
         self.cloud_slos.append(slo)
 
+    def record_shed(self, tenant: str, latency: float, slo: float) -> None:
+        self.ctrl.monitor.record_request(tenant, latency, slo)
+        self.shed_lats.append(latency)
+        self.shed_slos.append(slo)
+
     def finalize(self, slo_of: dict[str, float]) -> SimResult:
         mon = self.ctrl.monitor
         lats = [rs.latency() for rs in self.engine.completed]
         slos = [slo_of[rs.req.tenant] for rs in self.engine.completed]
-        lats += self.cloud_lats
-        slos += self.cloud_slos
+        lats += self.cloud_lats + self.shed_lats
+        slos += self.cloud_slos + self.shed_slos
         total_req = mon.total_requests
         total_viol = mon.total_violations
         return SimResult(
@@ -129,6 +140,11 @@ class ServingFederationResult(FederationResult):
     completed: int = 0              # requests served by Edge engines
     cloud_requests: int = 0         # requests serviced on the Cloud tier
     virtual_duration_s: float = 0.0
+    shed: int = 0                   # load-shed requests (violations)
+    submitted: int = 0              # every request the federation took
+    # the PR-6 conservation invariant, asserted by _finalize:
+    # submitted == completed + cloud_requests (+ engine strays) + shed
+    requests_conserved: bool = True
 
 
 class ServingFederation:
@@ -182,10 +198,13 @@ class ServingFederation:
         self.placements: list[PlacementEvent] = []
         self.replaced: list[str] = []
         self.failed: set[str] = set()
+        self._ever_failed: set[str] = set()
+        self.recovered: list[str] = []
+        self._submitted = 0
         self.cloud_tenants: dict[str, ServingNode] = {}   # name → host node
         self.hosted: dict[str, ServingNode] = {}
         self._pending_migrations: list[tuple[ServingNode, str, list]] = []
-        self._validate_failures()
+        self._validate_faults()
         # spec draws federation-side in fleet order (same pattern as the
         # sim federation, so placement never perturbs a sibling's roll)
         rng = np.random.default_rng(cfg.seed)
@@ -200,31 +219,113 @@ class ServingFederation:
             self._place(wl, donation=donation, premium=premium, t=0.0)
 
     # ---------------------------------------------------------- validation
-    def _validate_failures(self) -> None:
+    def _validate_faults(self) -> None:
         cfg, spec = self.cfg, self.spec
         node_names = {n.name for n in self.nodes}
-        normalized: list[tuple[float, tuple[str, ...]]] = []
-        for ft, fnodes in cfg.node_failures:
-            fnames = (fnodes,) if isinstance(fnodes, str) else tuple(fnodes)
-            if not fnames:
-                raise ValueError(f"node failure at t={ft} names no nodes")
-            for fname in fnames:
+        rv = spec.round_virtual_s
+        end = spec.duration_virtual_s
+
+        def names_of(fnodes, what: str, ft) -> tuple[str, ...]:
+            names = (fnodes,) if isinstance(fnodes, str) else tuple(fnodes)
+            if not names:
+                raise ValueError(f"{what} at t={ft} names no nodes")
+            for fname in names:
                 if fname not in node_names:
-                    raise ValueError(f"node_failures names unknown node "
+                    raise ValueError(f"{what}s names unknown node "
                                      f"{fname!r} (have {sorted(node_names)})")
+            return names
+
+        def boundary(t) -> float:
+            return float(np.ceil(t / rv)) * rv
+
+        normalized: list[tuple[float, tuple[str, ...]]] = []
+        recoveries: list[tuple[float, tuple[str, ...]]] = []
+        windows: list[tuple[float, float, str]] = []
+        for entry in cfg.node_failures:
+            ft, fnodes = entry[0], entry[1]
+            rt = entry[2] if len(entry) > 2 else None
+            fnames = names_of(fnodes, "node failure", ft)
             if not 0 < ft:
                 raise ValueError(f"node failure at t={ft} must be > 0")
-            rv = spec.round_virtual_s
-            boundary = float(np.ceil(ft / rv)) * rv
-            if boundary >= spec.duration_virtual_s:
+            fb = boundary(ft)
+            if fb >= end:
                 raise ValueError(
                     f"node failure at t={ft} would never fire: its round "
-                    f"boundary {boundary:g} is not before the virtual "
-                    f"session end {spec.duration_virtual_s:g}")
+                    f"boundary {fb:g} is not before the virtual "
+                    f"session end {end:g}")
+            if rt is None:
+                rb = None
+            else:
+                if rt <= ft:
+                    raise ValueError(f"node failure at t={ft}: recover_t="
+                                     f"{rt} must be after the failure")
+                rb = boundary(rt)
+                if rb <= fb:
+                    raise ValueError(
+                        f"node failure at t={ft}: recovery at t={rt} "
+                        f"shares round boundary {fb:g} with the failure — "
+                        f"the node would never be down")
+                if rb >= end:
+                    raise ValueError(
+                        f"node recovery at t={rt} would never fire: its "
+                        f"round boundary {rb:g} is not before the virtual "
+                        f"session end {end:g}")
+                recoveries.append((float(rt), fnames))
             normalized.append((float(ft), fnames))
-        if len({nm for _, fn in normalized for nm in fn}) >= cfg.n_nodes:
-            raise ValueError("node_failures would kill every node")
+            for nm in fnames:
+                windows.append((fb, np.inf if rb is None else rb, nm))
+        # concurrently-dead check: at any failure boundary at least one
+        # node must survive
+        for fb, _, _ in windows:
+            dead = {nm for lo, hi, nm in windows if lo <= fb < hi}
+            if len(dead) >= cfg.n_nodes:
+                raise ValueError("node_failures would kill every node")
+
+        deg_starts: list[tuple[float, tuple[str, ...], float]] = []
+        deg_ends: list[tuple[float, tuple[str, ...]]] = []
+        for t0, t1, dnodes, frac in cfg.node_degradations:
+            dnames = names_of(dnodes, "node degradation", t0)
+            if not 0 < t0 < t1:
+                raise ValueError(f"degradation window [{t0}, {t1}) must "
+                                 f"satisfy 0 < t0 < t1")
+            if not 0.0 < frac <= 1.0:
+                raise ValueError(f"degradation capacity_fraction {frac} "
+                                 f"must be in (0, 1]")
+            if boundary(t0) >= end:
+                raise ValueError(
+                    f"node degradation at t={t0} would never fire: its "
+                    f"round boundary {boundary(t0):g} is not before the "
+                    f"virtual session end {end:g}")
+            deg_starts.append((float(t0), dnames, float(frac)))
+            deg_ends.append((float(t1), dnames))
+        wan_starts: list[tuple[float, tuple[str, ...], float]] = []
+        wan_ends: list[tuple[float, tuple[str, ...], float]] = []
+        for t0, t1, wnodes, extra in cfg.wan_faults:
+            wnames = names_of(wnodes, "WAN fault", t0)
+            if not 0 < t0 < t1:
+                raise ValueError(f"WAN fault window [{t0}, {t1}) must "
+                                 f"satisfy 0 < t0 < t1")
+            if extra < 0:
+                raise ValueError(f"WAN fault extra_latency_s {extra} "
+                                 f"must be >= 0")
+            if boundary(t0) >= end:
+                raise ValueError(
+                    f"WAN fault at t={t0} would never fire: its round "
+                    f"boundary {boundary(t0):g} is not before the "
+                    f"virtual session end {end:g}")
+            wan_starts.append((float(t0), wnames, float(extra)))
+            wan_ends.append((float(t1), wnames, float(extra)))
+
         self._pending_failures = sorted(normalized)
+        self._pending_recoveries = sorted(recoveries)
+        self._pending_deg_starts = sorted(deg_starts)
+        self._pending_deg_ends = sorted(deg_ends)
+        self._pending_wan_starts = sorted(wan_starts)
+        self._pending_wan_ends = sorted(wan_ends)
+        self._base_units = {n.name: n.capacity_units for n in self.nodes}
+        self._base_wan = {n.name: n.cfg.wan_extra_latency
+                          for n in self.nodes}
+        self._wan_extra = {n.name: 0.0 for n in self.nodes}
 
     # ---------------------------------------------------------- placement
     def _feasible_nodes(self, wl: Workload,
@@ -277,6 +378,12 @@ class ServingFederation:
                 self.replaced.append(wl.name)
             return node
         host = self._live_host(src_node or self.nodes[0])
+        if prior_age:
+            # keep the credit on the hosting controller so a recovery
+            # drain can re-place with Age_s/Loyalty_s intact
+            host.ctrl.remember_age(wl.name, prior_age)
+        if prior_loyalty:
+            host.ctrl.remember_loyalty(wl.name, prior_loyalty)
         self.hosted.pop(wl.name, None)
         self.cloud_tenants[wl.name] = host
         self.placements.append(PlacementEvent(
@@ -344,6 +451,7 @@ class ServingFederation:
         accounting to a live node. Requests the dead node already served
         still count in Eq. 1."""
         self.failed.add(node.name)
+        self._ever_failed.add(node.name)
         eng = node.engine
         refugees = []
         for name in list(eng.ctrl.registry):
@@ -367,19 +475,169 @@ class ServingFederation:
             if host is node:
                 self.cloud_tenants[name] = self._live_host(None)
 
-    def _apply_failures(self, t1: float) -> None:
+    def _drain_cloud(self, t1: float) -> None:
+        """After a node rejoins, re-place Cloud-fallback tenants back
+        onto the Edge (tenant-name order; Age_s/Loyalty_s carried from
+        the hosting controller). Tenants with no feasible node stay on
+        the Cloud."""
+        for name in sorted(self.cloud_tenants):
+            wl = self.wl[name]
+            if not self._feasible_nodes(wl):
+                continue
+            host = self.cloud_tenants[name]
+            age = host.ctrl.prior_age(name)
+            loyalty = host.ctrl.prior_loyalty(name)
+            spec = TenantSpec(
+                name=name,
+                slo_latency=self.slo[name],
+                users=wl.users(),
+                donation=False,     # same refugee contract as a migration
+                pricing=self.cfg.pricing,
+                premium=0.0,
+            )
+            self._place(wl, donation=False, premium=0.0, t=t1, spec=spec,
+                        prior_age=age, prior_loyalty=loyalty,
+                        kind="recover")
+
+    def _due(self, sched: list, t1: float) -> list:
+        out = []
+        while sched and sched[0][0] <= t1:
+            out.append(sched.pop(0))
+        return out
+
+    def _node(self, name: str) -> ServingNode:
+        return next(n for n in self.nodes if n.name == name)
+
+    def _apply_faults(self, t1: float) -> None:
+        """Same fixed order as the sim federation: recoveries, then all
+        due failures as one correlated batch, then the Cloud→Edge
+        recovery drain, then degradation restores/starts (the
+        contraction cascade's evicted queues migrate immediately), then
+        WAN clears/starts."""
+        recovered: list[str] = []
+        for _, rnames in self._due(self._pending_recoveries, t1):
+            for rname in rnames:
+                if rname in self.failed:
+                    self.failed.discard(rname)
+                    recovered.append(rname)
+                    self.recovered.append(rname)
+
         due: list[str] = []
         while self._pending_failures and self._pending_failures[0][0] <= t1:
             _, fnames = self._pending_failures.pop(0)
             for fname in fnames:
                 if fname not in self.failed and fname not in due:
                     due.append(fname)
-        if not due:
+        if due:
+            self.failed.update(due)      # all dead before any re-placement
+            self._ever_failed.update(due)
+            for fname in due:
+                self._fail_node(self._node(fname), t1)
+
+        if any(r not in self.failed for r in recovered):
+            self._drain_cloud(t1)
+
+        for _, dnames in self._due(self._pending_deg_ends, t1):
+            for dname in dnames:
+                if dname not in self.failed:
+                    self._node(dname).ctrl.resize_capacity(
+                        self._base_units[dname])
+        degraded = False
+        for _, dnames, frac in self._due(self._pending_deg_starts, t1):
+            for dname in dnames:
+                if dname in self.failed:
+                    continue             # a dead node cannot degrade
+                node = self._node(dname)
+                units = max(1, int(self._base_units[dname] * frac))
+                node.ctrl.resize_capacity(units)
+                degraded = True
+        if degraded:
+            # the cascade's victims handed their live queues to
+            # evict_hook — migrate them now, at the same boundary
+            self._migrate_pending(t1)
+
+        for _, wnames, extra in self._due(self._pending_wan_ends, t1):
+            for wname in wnames:
+                self._wan_extra[wname] -= extra
+                self._node(wname).cfg.wan_extra_latency = \
+                    self._base_wan[wname] + self._wan_extra[wname]
+        for _, wnames, extra in self._due(self._pending_wan_starts, t1):
+            for wname in wnames:
+                self._wan_extra[wname] += extra
+                self._node(wname).cfg.wan_extra_latency = \
+                    self._base_wan[wname] + self._wan_extra[wname]
+
+    # ---------------------------------------------------------- resilience
+    def _apply_timeouts(self, now: float) -> None:
+        """Per-request timeouts on the virtual clock: a request not
+        finished ``timeout_s`` after (re-)submission leaves its decode
+        slot / KV pages, re-enqueues with capped exponential backoff
+        while it has retries left, and is Cloud-serviced after that.
+        Mid-decode victims restart from the prompt on re-admission (the
+        same restart-clean semantics as a cross-node migration)."""
+        spec = self.spec
+        if spec.timeout_s is None:
             return
-        self.failed.update(due)          # all dead before any re-placement
-        for fname in due:
-            node = next(n for n in self.nodes if n.name == fname)
-            self._fail_node(node, t1)
+        for node in self._live_nodes():
+            sched = node.engine.sched
+            for name in list(sched.tenants):
+                tq = sched.tenants[name]
+                timed_out = [rs for rs in list(tq.active) + list(tq.waiting)
+                             if rs.timeout_t is not None
+                             and now > rs.timeout_t]
+                if not timed_out:
+                    continue
+                rt = node.engine.tenants.get(name)
+                for rs in timed_out:
+                    if rs in tq.active:
+                        tq.active.remove(rs)
+                        if rt is not None and rs.batch_slot >= 0 \
+                                and rt.slot_req[rs.batch_slot] is rs:
+                            rt.slot_req[rs.batch_slot] = None
+                        rs.batch_slot = -1
+                    else:
+                        tq.waiting.remove(rs)
+                    if rs.retries < spec.retry_limit:
+                        rs.retries += 1
+                        backoff = min(
+                            spec.backoff_base_s * 2.0 ** (rs.retries - 1),
+                            spec.backoff_cap_s)
+                        rs.generated.clear()
+                        rs.phase = Phase.QUEUED
+                        rs.not_before = now + backoff
+                        rs.timeout_t = rs.not_before + spec.timeout_s
+                        tq.waiting.append(rs)
+                    else:                # retry budget spent → Cloud
+                        rs.phase = Phase.EVICTED
+                        self._cloud_flush(node, name, [rs], now)
+
+    def _shed_excess(self, now: float) -> None:
+        """Graceful degradation: while a node's total admission-queue
+        depth exceeds ``shed_depth``, the lowest-priority tenant with a
+        queue sheds its YOUNGEST waiting request — accounted as a
+        guaranteed SLO violation (the user is redirected to the origin),
+        never silently dropped."""
+        depth_cap = self.spec.shed_depth
+        if depth_cap is None:
+            return
+        for node in self._live_nodes():
+            sched = node.engine.sched
+            total = sum(len(tq.waiting) for tq in sched.tenants.values())
+            while total > depth_cap:
+                cands = [name for name, tq in sched.tenants.items()
+                         if tq.waiting]
+                if not cands:
+                    break
+                victim = min(cands, key=lambda nm: (
+                    node.ctrl.registry[nm].priority, nm))
+                rs = sched.tenants[victim].waiting.pop()
+                rs.phase = Phase.EVICTED
+                slo = self.slo[victim]
+                lat = (slo + node.cfg.wan_extra_latency
+                       + self.cloud_latency_s)
+                rs.finish_t = rs.req.arrival_t + lat
+                node.record_shed(victim, lat, slo)
+                total -= 1
 
     # ---------------------------------------------------------- execution
     def _submit_arrivals(self) -> None:
@@ -395,11 +653,15 @@ class ServingFederation:
             for _ in range(k):
                 prompt = [int(x) for x in
                           rng.integers(1, self.spec.vocab, c.prompt_len)]
+                self._submitted += 1
                 node = self.hosted.get(name)
                 if node is not None and node.name not in self.failed:
-                    node.engine.submit(name, prompt,
-                                       max_new_tokens=c.max_new_tokens,
-                                       user=wl.users())
+                    rs = node.engine.submit(name, prompt,
+                                            max_new_tokens=c.max_new_tokens,
+                                            user=wl.users())
+                    if self.spec.timeout_s is not None:
+                        rs.timeout_t = (rs.req.arrival_t
+                                        + self.spec.timeout_s)
                 else:
                     host = self._live_host(self.cloud_tenants.get(name))
                     host.record_cloud(
@@ -415,8 +677,10 @@ class ServingFederation:
             for _ in range(spec.steps_per_round):
                 self.clock.tick()
                 self._submit_arrivals()
+                self._shed_excess(self.clock())
                 for node in self._live_nodes():
                     node.engine.step()
+                self._apply_timeouts(self.clock())
             t1 = (r + 1) * spec.round_virtual_s
             if cfg.policy != "none" and t1 < spec.duration_virtual_s:
                 # all rounds first, re-placement after — a refugee must
@@ -425,7 +689,7 @@ class ServingFederation:
                 for node in self._live_nodes():
                     node.reports.append(node.ctrl.run_round())
                 self._migrate_pending(t1)
-            self._apply_failures(t1)
+            self._apply_faults(t1)
         # let in-flight requests finish (no new arrivals, no rounds)
         for _ in range(spec.drain_steps):
             live = self._live_nodes()
@@ -436,6 +700,7 @@ class ServingFederation:
             self.clock.tick()
             for node in live:
                 node.engine.step()
+            self._apply_timeouts(self.clock())
         # anything still stuck after the drain cap is Cloud-serviced so
         # every submitted request is accounted exactly once
         now = self.clock()
@@ -457,6 +722,17 @@ class ServingFederation:
         tokens = sum(len(rs.generated)
                      for n in self.nodes for rs in n.engine.completed)
         cloud_req = sum(len(n.cloud_lats) for n in self.nodes)
+        shed = sum(len(n.shed_lats) for n in self.nodes)
+        # requests that slipped through an engine's own Cloud path
+        # (unknown-tenant submit) — normally zero in a federation run
+        strays = sum(len(n.engine.cloud_serviced) for n in self.nodes)
+        # the PR-6 request-conservation invariant, now a cheap post-run
+        # assertion: every submitted request is accounted exactly once
+        if self._submitted != completed + cloud_req + strays + shed:
+            raise RuntimeError(
+                f"request conservation violated: submitted "
+                f"{self._submitted} != completed {completed} + cloud "
+                f"{cloud_req + strays} + shed {shed}")
         return ServingFederationResult(
             policy=self.cfg.policy,
             node_results=node_results,
@@ -466,9 +742,13 @@ class ServingFederation:
             placements=self.placements,
             replaced=self.replaced,
             cloud=sorted(self.cloud_tenants),
-            failed_nodes=sorted(self.failed),
+            failed_nodes=sorted(self._ever_failed | self.failed),
+            recovered_nodes=sorted(set(self.recovered)),
             tokens=tokens,
             completed=completed,
             cloud_requests=cloud_req,
             virtual_duration_s=self.clock(),
+            shed=shed,
+            submitted=self._submitted,
+            requests_conserved=True,
         )

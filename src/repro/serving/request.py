@@ -31,6 +31,12 @@ class RequestState:
     batch_slot: int = -1         # slot in the tenant's decode batch
     first_token_t: float | None = None
     finish_t: float | None = None
+    # resilience (serving federation timeouts): a request not finished
+    # by timeout_t is pulled back, retried after a backoff (not_before
+    # gates re-admission), and Cloud-serviced once retries are spent
+    retries: int = 0
+    not_before: float = 0.0
+    timeout_t: float | None = None
 
     @property
     def context_len(self) -> int:

@@ -108,14 +108,26 @@ class QuotaScheduler:
         rs.batch_slot = -1
         self.tenants[rs.req.tenant].waiting.append(rs)
 
-    def admit_waiting(self, name: str) -> list[RequestState]:
+    def admit_waiting(self, name: str,
+                      now: float | None = None) -> list[RequestState]:
         """Move waiting→active while slot & page quotas allow. Returns the
         newly admitted requests (they need prefill). Pages are reserved
-        worst-case (prompt + max_new_tokens), matching ``pages_used``."""
+        worst-case (prompt + max_new_tokens), matching ``pages_used``.
+
+        With ``now`` given, requests still inside a retry backoff
+        (``not_before > now``) are skipped over WITHOUT consuming a
+        slot — FIFO order among the rest is preserved, and the deferred
+        requests return to the head of the queue in their original
+        order. With every ``not_before`` at 0 (the default) behavior is
+        identical to the pre-timeout scheduler."""
         tq = self.tenants[name]
         admitted = []
+        deferred: list[RequestState] = []
         while tq.waiting:
             cand: RequestState = tq.waiting[0]
+            if now is not None and cand.not_before > now:
+                deferred.append(tq.waiting.popleft())
+                continue
             need_pages = reserved_pages(cand, self.page_size)
             if len(tq.active) + 1 > tq.quota.slots:
                 break
@@ -125,6 +137,8 @@ class QuotaScheduler:
             cand.phase = Phase.PREFILL
             tq.active.append(cand)
             admitted.append(cand)
+        for rs in reversed(deferred):
+            tq.waiting.appendleft(rs)
         return admitted
 
     def finish(self, name: str, rs: RequestState, now: float) -> None:

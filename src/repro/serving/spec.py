@@ -60,6 +60,21 @@ class ServingSpec:
     max_seq_len: int = 64
     drain_steps: int = 512              # post-session in-flight completion cap
     vocab: int = 200                    # prompt tokens drawn from [1, vocab)
+    # ---- resilience knobs (all off by default, so the pre-fault-model
+    # pins stay bitwise-identical)
+    # per-request timeout: a request not finished timeout_s after its
+    # (re-)submission frees its decode slot/KV pages and re-enqueues
+    # with capped exponential backoff, up to retry_limit times; after
+    # that it falls back to the Cloud tier. None → never times out.
+    timeout_s: float | None = None
+    retry_limit: int = 2
+    backoff_base_s: float = 0.5         # backoff = base · 2^(retry-1) …
+    backoff_cap_s: float = 4.0          # … capped here (virtual seconds)
+    # graceful load shedding: when a node's total admission-queue depth
+    # exceeds shed_depth, the lowest-priority tenants' youngest waiting
+    # requests are shed — counted as SLO violations, never silently
+    # dropped. None → queue unboundedly.
+    shed_depth: int | None = None
 
     @property
     def round_virtual_s(self) -> float:

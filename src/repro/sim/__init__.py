@@ -31,6 +31,35 @@ serving    token-level engine-owned    real LLM engine under the same
   bitwise breaks).
 * **token-level** — the serving engine replaces the latency model with
   a real multi-tenant LLM engine; only the control plane is shared.
+
+Fault-model support (``Scenario.faults`` / :class:`FaultSpec`): every
+fault kind fires at a chunk boundary and is honoured by **all five**
+engines and both control planes —
+
+=============== ==================================== =================
+fault           effect                               engines
+=============== ==================================== =================
+NodeFailure     node dies; live tenants fail over    all (scalar /
+(+ recover_t)   to survivors or the Cloud; with      vectorized /
+                ``recover_t`` the node rejoins and   batched / jax /
+                Cloud-fallback refugees are drained  serving)
+                back onto the Edge by the placement
+                policy (Age_s/Loyalty_s carried)
+NodeDegradation capacity shrinks to                  all
+                ``capacity_fraction`` for [t0, t1),
+                forcing a Procedure-2/3 contraction
+                cascade, then restores
+WanFault        per-node WAN latency bump for        all
+                [t0, t1) — threads through
+                ``wan_extra_latency`` into every
+                Cloud round-trip
+=============== ==================================== =================
+
+The numpy trio stays bitwise-identical through every fault path (no
+fault draws new randomness); the serving federation additionally
+offers per-request timeouts with capped-backoff retries and graceful
+load shedding (:class:`repro.serving.spec.ServingSpec` knobs, all off
+by default).
 """
 from repro.sim.workload import (FleetBatch, GameWorkload,  # noqa: F401
                                 StreamWorkload, Workload, make_game_fleet,
@@ -48,9 +77,9 @@ from repro.sim.federation import (PLACEMENTS, SWEEP_POLICIES,  # noqa: F401
                                   PlacementPolicy, paper_capacity_units,
                                   resolve_placement)
 from repro.sim.scenario import (SCENARIOS, FaultSpec, FleetSpec,  # noqa: F401
-                                NodeFailure, PolicyOutcome, Scenario,
-                                ScenarioResult, TenantClassSpec,
-                                TopologySpec, register_scenario,
-                                run_scenario)
+                                NodeDegradation, NodeFailure,
+                                PolicyOutcome, Scenario, ScenarioResult,
+                                TenantClassSpec, TopologySpec, WanFault,
+                                register_scenario, run_scenario)
 from repro.core.forecast import (FORECASTERS,  # noqa: F401  (re-export)
                                  SCALING_POLICIES)

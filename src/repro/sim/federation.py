@@ -20,6 +20,14 @@ whole fleet of nodes:
   failures: at the first chunk boundary ≥ the scheduled second, every
   tenant the node hosts re-places on the surviving siblings (or the
   Cloud tier), keeping its spec, RNG streams, Age_s and Loyalty_s.
+  A failure may carry a ``recover_t``: the node rejoins empty at that
+  boundary and Cloud-fallback tenants drain back onto the Edge through
+  the placement policy (flapping = repeated fail/recover pairs).
+  ``node_degradations`` shrink a node's capacity mid-run (a real
+  Procedure-2/3 contraction cascade re-places the overflow) and
+  ``wan_faults`` spike a node↔Cloud link's latency over a window —
+  every fault kind fires at chunk boundaries only, preserving the
+  engines' bitwise determinism contract.
 * **Re-placement** — when a node's Procedure 3 terminates a tenant
   (eviction under contention), the federation first tries to migrate it
   to a sibling Edge node with spare capacity, and only falls back to
@@ -163,13 +171,23 @@ class FederationConfig:
     # the homogeneous WAN_EXTRA_LATENCY default on every node
     node_wan_latency_s: list[float] | None = None
     node_unit_price: list[float] | None = None   # price-aware placement
-    # scheduled node failures: (second, node name | list of node names);
-    # each fires at the first chunk boundary ≥ its second. A multi-name
-    # entry is a CORRELATED failure (whole-rack outage): every listed
-    # node is marked dead before any tenant re-places, so refugees only
-    # land on true survivors (or the Cloud tier)
-    node_failures: list[tuple[int, "str | tuple[str, ...] | list[str]"]] \
-        = field(default_factory=list)
+    # scheduled node failures: (second, node name | list of node names)
+    # with an optional third element recover_t; each fires at the first
+    # chunk boundary ≥ its second. A multi-name entry is a CORRELATED
+    # failure (whole-rack outage): every listed node is marked dead
+    # before any tenant re-places, so refugees only land on true
+    # survivors (or the Cloud tier). With recover_t the node rejoins
+    # (empty, placeable) at the first boundary ≥ recover_t and the
+    # federation drains Cloud-fallback tenants back onto the Edge
+    node_failures: list[tuple] = field(default_factory=list)
+    # capacity degradations: (t0, t1, node(s), capacity_fraction) — the
+    # node's uR capacity shrinks to the fraction at the first boundary
+    # ≥ t0 (Procedure-2/3 contraction cascade re-places the overflow)
+    # and restores at the first boundary ≥ t1
+    node_degradations: list[tuple] = field(default_factory=list)
+    # WAN latency spikes: (t0, t1, node(s), extra_latency_s) added to
+    # the node↔Cloud link over the window, at chunk boundaries
+    wan_faults: list[tuple] = field(default_factory=list)
     seed: int = 0
 
     def _per_node(self, values, i: int, default):
@@ -213,7 +231,9 @@ class PlacementEvent:
     t: int                      # simulated second of the decision
     tenant: str
     node: str | None            # None → Cloud tier
-    kind: str                   # "admit" | "replace" | "failover" | "cloud"
+    # "admit" | "replace" | "failover" | "cloud" | "recover" (a
+    # Cloud-fallback tenant drained back onto the Edge after a rejoin)
+    kind: str
     source: str | None = None   # node the tenant was evicted/failed from
 
 
@@ -227,7 +247,8 @@ class FederationResult:
     placements: list[PlacementEvent] = field(default_factory=list)
     replaced: list[str] = field(default_factory=list)   # moved node→node
     cloud: list[str] = field(default_factory=list)      # ended on the Cloud
-    failed_nodes: list[str] = field(default_factory=list)   # FaultSpec hits
+    failed_nodes: list[str] = field(default_factory=list)   # ever failed
+    recovered_nodes: list[str] = field(default_factory=list)  # rejoined
 
     @property
     def per_node_vr(self) -> dict[str, float]:
@@ -250,36 +271,121 @@ class EdgeFederation:
         self.placements: list[PlacementEvent] = []
         self.replaced: list[str] = []
         self.failed: set[str] = set()
+        self._ever_failed: set[str] = set()
+        self.recovered: list[str] = []
         node_names = {n.name for n in self.nodes}
-        normalized: list[tuple[int, tuple[str, ...]]] = []
-        for ft, fnodes in cfg.node_failures:
+
+        def names_of(fnodes, what: str, ft) -> tuple[str, ...]:
             # one event may name several nodes (correlated/rack outage)
             names = ((fnodes,) if isinstance(fnodes, str)
                      else tuple(fnodes))
             if not names:
-                raise ValueError(f"node failure at t={ft} names no nodes")
+                raise ValueError(f"{what} at t={ft} names no nodes")
             for fname in names:
                 if fname not in node_names:
-                    raise ValueError(f"node_failures names unknown node "
+                    raise ValueError(f"{what}s names unknown node "
                                      f"{fname!r} (have {sorted(node_names)})")
+            return names
+
+        def boundary(t) -> int:
+            # boundaries are the multiples of round_interval (plus the
+            # run end, where firing would be unobservable)
+            return int(-(-t // cfg.round_interval) * cfg.round_interval)
+
+        normalized: list[tuple[int, tuple[str, ...]]] = []
+        recoveries: list[tuple[int, tuple[str, ...]]] = []
+        windows: list[tuple[int, float, str]] = []   # (dead-from, -to, node)
+        for entry in cfg.node_failures:
+            ft, fnodes = entry[0], entry[1]
+            rt = entry[2] if len(entry) > 2 else None
+            names = names_of(fnodes, "node failure", ft)
             if not 0 < ft:
                 raise ValueError(f"node failure at t={ft} must be > 0")
-            # boundaries are the multiples of round_interval (plus the
-            # run end, where firing would be unobservable): a failure
-            # whose first boundary is not inside the run never fires —
-            # reject it instead of silently dropping it
-            boundary = -(-ft // cfg.round_interval) * cfg.round_interval
-            if boundary >= cfg.duration_s:
+            # a failure whose first boundary is not inside the run never
+            # fires — reject it instead of silently dropping it
+            fb = boundary(ft)
+            if fb >= cfg.duration_s:
                 raise ValueError(
                     f"node failure at t={ft} would never fire: its chunk "
-                    f"boundary {boundary} is not before "
+                    f"boundary {fb} is not before "
                     f"duration_s={cfg.duration_s}")
+            if rt is None:
+                rb = None
+            else:
+                if rt <= ft:
+                    raise ValueError(f"node failure at t={ft}: recover_t="
+                                     f"{rt} must be after the failure")
+                rb = boundary(rt)
+                if rb <= fb:
+                    raise ValueError(
+                        f"node failure at t={ft}: recovery at t={rt} "
+                        f"shares chunk boundary {fb} with the failure — "
+                        f"the node would never be down")
+                if rb >= cfg.duration_s:
+                    raise ValueError(
+                        f"node recovery at t={rt} would never fire: its "
+                        f"chunk boundary {rb} is not before "
+                        f"duration_s={cfg.duration_s}")
+                recoveries.append((rt, names))
             normalized.append((ft, names))
-        if len({nm for _, names in normalized for nm in names}) \
-                >= cfg.n_nodes:
-            raise ValueError("node_failures would kill every node")
-        # schedule sorted by time; each fires at the first boundary ≥ t
+            for nm in names:
+                windows.append((fb, np.inf if rb is None else rb, nm))
+        # "kills every node" now means CONCURRENTLY dead — at any failure
+        # boundary, the set of nodes whose dead window [fb, rb) covers it
+        # must leave at least one survivor
+        for fb, _, _ in windows:
+            dead = {nm for lo, hi, nm in windows if lo <= fb < hi}
+            if len(dead) >= cfg.n_nodes:
+                raise ValueError("node_failures would kill every node")
+
+        deg_starts: list[tuple[int, tuple[str, ...], float]] = []
+        deg_ends: list[tuple[int, tuple[str, ...]]] = []
+        for t0, t1, dnodes, frac in cfg.node_degradations:
+            names = names_of(dnodes, "node degradation", t0)
+            if not 0 < t0 < t1:
+                raise ValueError(f"degradation window [{t0}, {t1}) must "
+                                 f"satisfy 0 < t0 < t1")
+            if not 0.0 < frac <= 1.0:
+                raise ValueError(f"degradation capacity_fraction {frac} "
+                                 f"must be in (0, 1]")
+            if boundary(t0) >= cfg.duration_s:
+                raise ValueError(
+                    f"node degradation at t={t0} would never fire: its "
+                    f"chunk boundary {boundary(t0)} is not before "
+                    f"duration_s={cfg.duration_s}")
+            deg_starts.append((t0, names, frac))
+            deg_ends.append((t1, names))   # past-the-end → never restores
+
+        wan_starts: list[tuple[int, tuple[str, ...], float]] = []
+        wan_ends: list[tuple[int, tuple[str, ...], float]] = []
+        for t0, t1, wnodes, extra in cfg.wan_faults:
+            names = names_of(wnodes, "WAN fault", t0)
+            if not 0 < t0 < t1:
+                raise ValueError(f"WAN fault window [{t0}, {t1}) must "
+                                 f"satisfy 0 < t0 < t1")
+            if extra < 0:
+                raise ValueError(f"WAN fault extra_latency_s {extra} "
+                                 f"must be >= 0")
+            if boundary(t0) >= cfg.duration_s:
+                raise ValueError(
+                    f"WAN fault at t={t0} would never fire: its chunk "
+                    f"boundary {boundary(t0)} is not before "
+                    f"duration_s={cfg.duration_s}")
+            wan_starts.append((t0, names, extra))
+            wan_ends.append((t1, names, extra))
+
+        # schedules sorted by time; each fires at the first boundary ≥ t
         self._pending_failures = sorted(normalized)
+        self._pending_recoveries = sorted(recoveries)
+        self._pending_deg_starts = sorted(deg_starts)
+        self._pending_deg_ends = sorted(deg_ends)
+        self._pending_wan_starts = sorted(wan_starts)
+        self._pending_wan_ends = sorted(wan_ends)
+        # restore targets for degradation/WAN ends
+        self._base_units = {n.name: n.cfg.capacity_units for n in self.nodes}
+        self._base_wan = {n.name: n.cfg.wan_extra_latency
+                          for n in self.nodes}
+        self._wan_extra = {n.name: 0.0 for n in self.nodes}
         names = [wl.name for wl in workloads]
         if len(set(names)) != len(names):
             raise ValueError("duplicate tenant names in federation fleet")
@@ -347,6 +453,12 @@ class EdgeFederation:
         # when the source itself failed) as an evicted tenant — requests
         # keep flowing with that node's WAN latency
         host = self._live_host(src_node or self.nodes[0])
+        if prior_age:
+            # keep the Age_s/Loyalty_s credit on the hosting controller,
+            # so a later recovery drain re-places with history intact
+            host.ctrl.remember_age(wl.name, prior_age)
+        if prior_loyalty:
+            host.ctrl.remember_loyalty(wl.name, prior_loyalty)
         host.host_cloud_tenant(wl, tenant_rng=tenant_rng)
         self.placements.append(PlacementEvent(
             t=t, tenant=wl.name, node=None, kind="cloud", source=source))
@@ -384,6 +496,7 @@ class EdgeFederation:
         (``DyverseController.release_tenant``). The dead node's
         already-served requests still count in Eq. 1."""
         self.failed.add(node.name)       # idempotent under batched faults
+        self._ever_failed.add(node.name)
         refugees = []
         for name in list(node.workloads):
             age = node.ctrl.prior_age(name)
@@ -410,24 +523,107 @@ class EdgeFederation:
                         prior_age=age, prior_loyalty=loyalty,
                         kind="failover")
 
-    def _apply_failures(self, t1: int) -> None:
-        """Fire every scheduled failure due at this boundary as ONE
-        correlated batch: all dying nodes are marked dead before any
-        tenant re-places, so a rack outage's refugees only ever land on
-        true survivors — never on a sibling that is failing in the same
-        event."""
+    def _drain_cloud(self, t1: int) -> None:
+        """After a node rejoins, re-place Cloud-fallback tenants back
+        onto the Edge through the active placement policy (tenant-name
+        order for determinism; RNG stream, Age_s and Loyalty_s carried).
+        Tenants with no feasible node stay on the Cloud."""
+        entries = sorted(
+            (name, node) for node in self.nodes
+            if node.name not in self.failed for name in node.evicted)
+        for name, node in entries:
+            wl = node.workloads[name]
+            if not self._feasible_nodes(wl):
+                continue
+            age = node.ctrl.prior_age(name)
+            loyalty = node.ctrl.prior_loyalty(name)
+            rng = node.tenant_rngs[name]
+            node.remove_tenant(name)
+            spec = TenantSpec(
+                name=name,
+                slo_latency=node.cfg.slo_scale * wl.base_latency,
+                users=wl.users(),
+                donation=False,     # same refugee contract as a migration
+                pricing=node.cfg.pricing,
+                premium=0.0,
+            )
+            self._place(wl, donation=False, premium=0.0, t=t1, spec=spec,
+                        tenant_rng=rng, prior_age=age,
+                        prior_loyalty=loyalty, kind="recover")
+
+    def _due(self, sched: list, t1: int) -> list:
+        out = []
+        while sched and sched[0][0] <= t1:
+            out.append(sched.pop(0))
+        return out
+
+    def _node(self, name: str) -> EdgeNodeSim:
+        return next(n for n in self.nodes if n.name == name)
+
+    def _apply_faults(self, t1: int) -> None:
+        """Fire every scheduled fault event due at this chunk boundary,
+        in a fixed order: (1) recoveries mark nodes live again, (2) all
+        due failures are marked dead as ONE correlated batch before any
+        tenant re-places — so a rack outage's refugees only ever land
+        on true survivors, never on a sibling failing in the same event
+        (a node recovering and re-failing at the SAME boundary stays
+        continuously dead), (3) rejoins drain Cloud-fallback tenants
+        back onto the Edge, (4) degradation windows close then open
+        (capacity restore before a new contraction cascade), (5) WAN
+        spikes clear then start."""
+        recovered: list[str] = []
+        for _, rnames in self._due(self._pending_recoveries, t1):
+            for rname in rnames:
+                if rname in self.failed:
+                    self.failed.discard(rname)
+                    recovered.append(rname)
+                    self.recovered.append(rname)
+
         due: list[str] = []
         while self._pending_failures and self._pending_failures[0][0] <= t1:
             _, fnames = self._pending_failures.pop(0)
             for fname in fnames:
                 if fname not in self.failed and fname not in due:
                     due.append(fname)   # duplicate entries: already dead
-        if not due:
-            return
-        self.failed.update(due)
-        for fname in due:
-            node = next(n for n in self.nodes if n.name == fname)
-            self._fail_node(node, t1)
+        if due:
+            self.failed.update(due)
+            self._ever_failed.update(due)
+            for fname in due:
+                self._fail_node(self._node(fname), t1)
+
+        if any(r not in self.failed for r in recovered):
+            self._drain_cloud(t1)
+
+        for _, dnames in self._due(self._pending_deg_ends, t1):
+            for dname in dnames:
+                if dname not in self.failed:
+                    # growing back to base capacity never evicts
+                    self._node(dname).ctrl.resize_capacity(
+                        self._base_units[dname])
+        for _, dnames, frac in self._due(self._pending_deg_starts, t1):
+            for dname in dnames:
+                if dname in self.failed:
+                    continue            # a dead node cannot degrade
+                node = self._node(dname)
+                units = max(1, int(self._base_units[dname] * frac))
+                terminated = node.ctrl.resize_capacity(units)
+                self._replace_terminated(node, terminated, t1)
+
+        wan_dirty: set[str] = set()
+        for _, wnames, extra in self._due(self._pending_wan_ends, t1):
+            for wname in wnames:
+                self._wan_extra[wname] -= extra
+                wan_dirty.add(wname)
+        for _, wnames, extra in self._due(self._pending_wan_starts, t1):
+            for wname in wnames:
+                self._wan_extra[wname] += extra
+                wan_dirty.add(wname)
+        for wname in sorted(wan_dirty):
+            node = self._node(wname)
+            node.cfg.wan_extra_latency = (self._base_wan[wname]
+                                          + self._wan_extra[wname])
+            # fleet steppers cache per-node WAN by epoch — invalidate
+            node._fleet_epoch += 1
 
     # ---------------------------------------------------------- execution
     def run(self) -> FederationResult:
@@ -459,7 +655,7 @@ class EdgeFederation:
                     self._replace_terminated(node, report.terminated, t1)
             # faults fire at the boundary, after the rounds: the failing
             # node's last chunk is fully accounted before its tenants move
-            self._apply_failures(t1)
+            self._apply_faults(t1)
             t = t1
         return self._finalize()
 
@@ -477,5 +673,6 @@ class EdgeFederation:
             placements=self.placements,
             replaced=self.replaced,
             cloud=cloud,
-            failed_nodes=sorted(self.failed),
+            failed_nodes=sorted(self._ever_failed | self.failed),
+            recovered_nodes=sorted(set(self.recovered)),
         )

@@ -212,11 +212,58 @@ class NodeFailure:
     tuple of nodes — a CORRELATED failure (whole-rack outage): every
     listed node dies at the same chunk boundary and is excluded from
     placement before any of their tenants re-place, so refugees only
-    land on true survivors (or the Cloud tier)."""
+    land on true survivors (or the Cloud tier).
+
+    ``recover_t`` (optional) schedules the node's REJOIN: at the first
+    chunk boundary ≥ ``recover_t`` the node comes back empty and
+    placeable, and the federation drains Cloud-fallback tenants back
+    onto the Edge through the active placement policy (Age_s/Loyalty_s
+    and RNG streams carried). A flapping node is just repeated
+    fail/recover pairs."""
 
     t: int                              # simulated second (fires at the
     #                                     first chunk boundary ≥ t)
     node: str | tuple[str, ...]         # e.g. "edge1" / ("edge1", "edge2")
+    recover_t: int | None = None        # None → permanent failure
+
+    @property
+    def node_names(self) -> tuple[str, ...]:
+        return (self.node,) if isinstance(self.node, str) \
+            else tuple(self.node)
+
+
+@dataclass(frozen=True)
+class NodeDegradation:
+    """Capacity degradation over ``[t0, t1)``: the node's capacity
+    shrinks to ``capacity_fraction`` of its configured uR units at the
+    first chunk boundary ≥ ``t0`` (forcing a real Procedure-2/3
+    contraction cascade — lowest-priority tenants terminate and
+    re-place as refugees until the surviving capacity covers the
+    allocations) and is restored at the first boundary ≥ ``t1``."""
+
+    t0: int
+    t1: int
+    node: str | tuple[str, ...]
+    capacity_fraction: float            # in (0, 1]
+
+    @property
+    def node_names(self) -> tuple[str, ...]:
+        return (self.node,) if isinstance(self.node, str) \
+            else tuple(self.node)
+
+
+@dataclass(frozen=True)
+class WanFault:
+    """WAN latency spike over ``[t0, t1)``: the node↔Cloud link of every
+    named node carries ``extra_latency_s`` additional round-trip
+    latency, threading through ``SimConfig.wan_extra_latency`` (so
+    Cloud-serviced requests hosted on that node pay the spike) in every
+    engine. Fires/clears at chunk boundaries like the other faults."""
+
+    t0: int
+    t1: int
+    node: str | tuple[str, ...]
+    extra_latency_s: float
 
     @property
     def node_names(self) -> tuple[str, ...]:
@@ -226,7 +273,72 @@ class NodeFailure:
 
 @dataclass(frozen=True)
 class FaultSpec:
+    """The scenario's scheduled fault events. Validated at construction:
+    overlapping same-kind windows on one node (two failures of
+    ``edge1``, say) and degradations overlapping a failure window raise
+    ``ValueError`` immediately instead of corrupting federation state
+    mid-run. (A WAN fault MAY overlap a failure — the spike is simply
+    unobservable while the node is dead.)"""
+
     node_failures: tuple[NodeFailure, ...] = ()
+    degradations: tuple[NodeDegradation, ...] = ()
+    wan_faults: tuple[WanFault, ...] = ()
+
+    def __post_init__(self):
+        fail_w: dict[str, list] = {}
+        deg_w: dict[str, list] = {}
+        wan_w: dict[str, list] = {}
+
+        def add(windows, name, lo, hi, what):
+            for lo2, hi2, what2 in windows.setdefault(name, []):
+                if lo < hi2 and lo2 < hi:
+                    raise ValueError(
+                        f"{what} overlaps {what2} on node {name!r}")
+            windows[name].append((lo, hi, what))
+
+        for f in self.node_failures:
+            if f.t <= 0:
+                raise ValueError(f"node failure at t={f.t} must be > 0")
+            if f.recover_t is not None and f.recover_t <= f.t:
+                raise ValueError(
+                    f"failure of {f.node} at t={f.t}: recover_t="
+                    f"{f.recover_t} must be after the failure")
+            hi = math.inf if f.recover_t is None else f.recover_t
+            span = (f"failure [{f.t}, "
+                    + ("∞)" if f.recover_t is None else f"{f.recover_t})"))
+            for nm in f.node_names:
+                add(fail_w, nm, f.t, hi, span)
+        for d in self.degradations:
+            if d.t0 <= 0 or d.t1 <= d.t0:
+                raise ValueError(f"degradation window [{d.t0}, {d.t1}) "
+                                 f"must satisfy 0 < t0 < t1")
+            if not 0.0 < d.capacity_fraction <= 1.0:
+                raise ValueError(
+                    f"degradation capacity_fraction "
+                    f"{d.capacity_fraction} must be in (0, 1]")
+            span = f"degradation [{d.t0}, {d.t1})"
+            for nm in d.node_names:
+                add(deg_w, nm, d.t0, d.t1, span)
+                for lo2, hi2, what2 in fail_w.get(nm, []):
+                    if d.t0 < hi2 and lo2 < d.t1:
+                        raise ValueError(
+                            f"{span} overlaps {what2} on node {nm!r} — "
+                            f"a dead node cannot degrade")
+        for w in self.wan_faults:
+            if w.t0 <= 0 or w.t1 <= w.t0:
+                raise ValueError(f"WAN fault window [{w.t0}, {w.t1}) "
+                                 f"must satisfy 0 < t0 < t1")
+            if w.extra_latency_s < 0:
+                raise ValueError(f"WAN fault extra_latency_s "
+                                 f"{w.extra_latency_s} must be >= 0")
+            span = f"WAN fault [{w.t0}, {w.t1})"
+            for nm in w.node_names:
+                add(wan_w, nm, w.t0, w.t1, span)
+
+    @property
+    def events(self) -> tuple:
+        """Every fault event, all kinds (for name validation etc.)."""
+        return self.node_failures + self.degradations + self.wan_faults
 
 
 @dataclass(frozen=True)
@@ -288,8 +400,8 @@ class Scenario:
         # engine == "serving" special case folded into the registry)
         resolve_engine(self.engine).validate_scenario(self)
         node_names = {f"edge{i}" for i in range(self.topology.n_nodes)}
-        for f in self.faults.node_failures:
-            for nm in f.node_names:
+        for ev in self.faults.events:
+            for nm in ev.node_names:
                 if nm not in node_names:
                     raise ValueError(f"fault names unknown node {nm!r}")
 
@@ -330,7 +442,13 @@ class Scenario:
                                                    "wan_latency_s"),
             node_unit_price=topo._per_node_list(topo.unit_price,
                                                 "unit_price"),
-            node_failures=[(f.t, f.node) for f in self.faults.node_failures],
+            node_failures=[(f.t, f.node) if f.recover_t is None
+                           else (f.t, f.node, f.recover_t)
+                           for f in self.faults.node_failures],
+            node_degradations=[(d.t0, d.t1, d.node, d.capacity_fraction)
+                               for d in self.faults.degradations],
+            wan_faults=[(w.t0, w.t1, w.node, w.extra_latency_s)
+                        for w in self.faults.wan_faults],
             seed=self.seed,
         )
 
@@ -354,9 +472,29 @@ class Scenario:
         if dur >= self.duration_s:
             return self
         scale = dur / self.duration_s
-        faults = FaultSpec(tuple(
-            NodeFailure(max(ri, min(dur - ri, round(f.t * scale))), f.node)
-            for f in self.faults.node_failures))
+
+        def clamp_t(t: int, recovers: bool) -> int:
+            # leave room for the rejoin boundary when the failure has one
+            hi = dur - 2 * ri if recovers else dur - ri
+            return max(ri, min(hi, round(t * scale)))
+
+        failures = tuple(
+            NodeFailure(clamp_t(f.t, f.recover_t is not None), f.node)
+            if f.recover_t is None else
+            NodeFailure(t := clamp_t(f.t, True), f.node,
+                        max(t + ri, min(dur - ri, round(f.recover_t * scale))))
+            for f in self.faults.node_failures)
+        degradations = tuple(
+            NodeDegradation(t0 := clamp_t(d.t0, True),
+                            max(t0 + ri, round(d.t1 * scale)),
+                            d.node, d.capacity_fraction)
+            for d in self.faults.degradations)
+        wan_faults = tuple(
+            WanFault(t0 := clamp_t(w.t0, True),
+                     max(t0 + ri, round(w.t1 * scale)),
+                     w.node, w.extra_latency_s)
+            for w in self.faults.wan_faults)
+        faults = FaultSpec(failures, degradations, wan_faults)
         return dataclasses.replace(self, duration_s=dur, round_interval=ri,
                                    faults=faults)
 
@@ -376,6 +514,12 @@ class PolicyOutcome:
     cloud: int                               # tenants that ended on Cloud
     wall_s: float
     scaling_policy: str = "reactive"         # reactive|proactive|hybrid
+    recovered: int = 0                       # Cloud→Edge drains after rejoin
+    shed: int = 0                            # serving: load-shed requests
+    # serving: the PR-6 request-conservation invariant
+    # (submitted == completed + cloud + shed), asserted post-run;
+    # None on simulator engines (no request ledger)
+    requests_conserved: bool | None = None
 
 
 @dataclass
@@ -410,9 +554,15 @@ class ScenarioResult:
             f"{sc.fleet.size} tenants, {dur:g}s session, "
             f"placement={sc.placement}, engine={sc.engine}"
         ]
-        if sc.faults.node_failures:
-            lines.append("faults: " + ", ".join(
-                f"{f.node}@{f.t}s" for f in sc.faults.node_failures))
+        if sc.faults.events:
+            parts = [f"{f.node}@{f.t}s" if f.recover_t is None
+                     else f"{f.node}@{f.t}s↻{f.recover_t}s"
+                     for f in sc.faults.node_failures]
+            parts += [f"{d.node}×{d.capacity_fraction:g}[{d.t0},{d.t1})s"
+                      for d in sc.faults.degradations]
+            parts += [f"{w.node}+{w.extra_latency_s:g}sWAN[{w.t0},{w.t1})s"
+                      for w in sc.faults.wan_faults]
+            lines.append("faults: " + ", ".join(parts))
         band_hdr = "  ".join(f"{b[:11]:>11}" for b, _, _ in BANDS)
         pw = max(8, *(len(k) for k in self.outcomes)) if self.outcomes else 8
         lines.append(
@@ -508,6 +658,10 @@ def run_scenario(scenario: Scenario | str, *,
                 cloud=len(res.cloud),
                 wall_s=wall,
                 scaling_policy=spol,
+                recovered=sum(1 for p in res.placements
+                              if p.kind == "recover" and p.node is not None),
+                shed=getattr(res, "shed", 0),
+                requests_conserved=getattr(res, "requests_conserved", None),
             )
     return out
 
@@ -629,6 +783,72 @@ register_scenario(Scenario(
     topology=TopologySpec(n_nodes=4, headroom=48,
                           wan_latency_s=(0.06, 0.12, 0.12, 0.24)),
     faults=FaultSpec((NodeFailure(t=600, node="edge1"),)),
+))
+
+register_scenario(Scenario(
+    name="flapping_node",
+    description="Chaos: edge1 flaps twice (dies 240s, rejoins 480s; "
+                "dies again 720s, rejoins 960s). Refugees spill to "
+                "Cloud under tight paper capacity; each rejoin drains "
+                "them back onto the Edge through the placement policy.",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 32),)),
+    topology=TopologySpec(n_nodes=4, headroom=16),
+    policies=("none", "sdps"),
+    round_interval=120,
+    faults=FaultSpec((NodeFailure(t=240, node="edge1", recover_t=480),
+                      NodeFailure(t=720, node="edge1", recover_t=960))),
+))
+
+register_scenario(Scenario(
+    name="degraded_node_midrun",
+    description="Chaos: edge1 halves its capacity over [300,900)s — a "
+                "real Procedure-2/3 contraction cascade terminates the "
+                "lowest-priority tenants, who re-place as refugees; "
+                "full capacity restores at 900s.",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 32),)),
+    topology=TopologySpec(n_nodes=4, headroom=16),
+    policies=("none", "sdps"),
+    faults=FaultSpec(degradations=(
+        NodeDegradation(t0=300, t1=900, node="edge1",
+                        capacity_fraction=0.5),)),
+))
+
+register_scenario(Scenario(
+    name="wan_spike_storm",
+    description="Chaos: edge1 dies 240s→720s pushing refugees onto the "
+                "Cloud tier over survivors' WAN links, which then spike "
+                "+0.25s over [360,720)s — Cloud-serviced requests pay "
+                "the storm until the node rejoins and drains them back.",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 32),)),
+    topology=TopologySpec(n_nodes=4, headroom=8),
+    policies=("none", "sdps"),
+    round_interval=120,
+    faults=FaultSpec(
+        node_failures=(NodeFailure(t=240, node="edge1", recover_t=720),),
+        wan_faults=(WanFault(t0=360, t1=720,
+                             node=("edge0", "edge2", "edge3"),
+                             extra_latency_s=0.25),)),
+))
+
+register_scenario(Scenario(
+    name="serving_timeout_retry",
+    description="REAL engine chaos: the serving_edge_pair fleet with "
+                "per-request timeouts (4s, capped-backoff retry, then "
+                "Cloud) and queue-depth load shedding; edge1 dies at "
+                "virtual t=8s and rejoins at t=16s, draining its "
+                "Cloud-fallback tenants back onto the Edge.",
+    fleet=FleetSpec(classes=(TenantClassSpec("game", 2, prefix="hot"),
+                             TenantClassSpec("game", 2, prefix="tail"))),
+    topology=TopologySpec(n_nodes=2, capacity_units=8),
+    policies=("none", "sdps"),
+    default_units=1,
+    engine="serving",
+    faults=FaultSpec((NodeFailure(t=8, node="edge1", recover_t=16),)),
+    serving=ServingSpec(classes=(
+        ServingClassSpec(prefix="hot", rate=0.7, slo_s=2.0),
+        ServingClassSpec(prefix="tail", rate=0.15, slo_s=4.0),
+    ), rounds=6, timeout_s=4.0, retry_limit=1, backoff_base_s=0.5,
+        backoff_cap_s=2.0, shed_depth=12),
 ))
 
 

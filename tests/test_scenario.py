@@ -316,7 +316,7 @@ def test_failure_refugee_keeps_spec_and_is_not_aged():
     name = next(iter(node.ctrl.registry))
     st0 = node.ctrl.registry[name]
     spec0, age0 = st0.spec, st0.age
-    fed._apply_failures(60)
+    fed._apply_faults(60)
     new_node = next(n for n in fed.nodes
                     if name in n.ctrl.registry)
     st1 = new_node.ctrl.registry[name]
