@@ -1,0 +1,128 @@
+"""Campaign CLI: run a named sweep, report, persist, and gate.
+
+  PYTHONPATH=src python -m benchmarks.campaign [--quick] \\
+      [--campaign ci] [--workers 2] [--list] [--dry-run] \\
+      [--vr-tol-pp 0.5] [--wall-ratio 1.75] [--no-gate]
+
+One command replaces the per-section smoke steps: it expands the named
+campaign (default ``ci`` — every registry scenario across the
+vectorized/batched/jax/serving engines and both scaling extremes),
+fans the cells out over worker processes, prints the aggregated
+report, writes ``BENCH_campaign.json`` (the shared
+:mod:`repro.campaign.benchio` schema; written in quick mode too — the
+CI artifact), and exits non-zero when the gate fails: any
+failed/timed-out cell, non-finite VR, request-conservation violation,
+engine/control-plane consistency disagreement, or VR/wall regression
+beyond tolerance against the previous campaign report and the
+per-section ``BENCH_*.json`` trajectories.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="run an evaluation campaign and gate on regressions")
+    ap.add_argument("--campaign", default="ci",
+                    help="campaign name (see --list); default: ci")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-sized cells (CI gate); serving cells "
+                         "always run full-size")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="worker processes (<=0 runs cells inline); "
+                         "default 2")
+    ap.add_argument("--root", default=".",
+                    help="directory holding the BENCH_*.json baselines")
+    ap.add_argument("--list", action="store_true",
+                    help="list campaigns and exit")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the expanded cells (and what was "
+                         "masked) without running anything")
+    ap.add_argument("--vr-tol-pp", type=float, default=None,
+                    help="VR regression tolerance in percentage points "
+                         "(default 0.5)")
+    ap.add_argument("--wall-ratio", type=float, default=None,
+                    help="wall-clock regression ratio (default 1.75)")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-cell timeout in seconds (default: the "
+                         "campaign spec's cell_timeout_s)")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report + persist but always exit 0")
+    args = ap.parse_args(argv)
+
+    from repro.campaign import (Tolerances, build_report, diff_report,
+                                expand_campaign, format_campaigns,
+                                get_campaign, load_section, run_cells,
+                                write_bench)
+
+    if args.list:
+        print(format_campaigns())
+        return 0
+
+    spec = get_campaign(args.campaign)
+    cells, masked, filtered = expand_campaign(spec, verbose=True)
+    print(f"# campaign {spec.name!r}: {len(cells)} cells "
+          f"({len(masked)} masked, {filtered} filtered)", file=sys.stderr)
+    if args.dry_run:
+        for cell in cells:
+            print(cell.cell_id)
+        for cell_id, why in masked:
+            print(f"# masked {cell_id}: {why}")
+        return 0
+
+    done = [0]
+
+    def progress(rec: dict) -> None:
+        done[0] += 1
+        vr = rec.get("violation_rate")
+        tail = (f"VR={vr:.4f}" if vr is not None
+                else rec.get("error", ""))
+        print(f"# [{done[0]}/{len(cells)}] {rec['cell']}: "
+              f"{rec['status']} {tail}", file=sys.stderr)
+
+    t0 = time.perf_counter()
+    records = run_cells(
+        cells, quick=args.quick, workers=args.workers,
+        cell_timeout_s=(args.timeout if args.timeout is not None
+                        else spec.cell_timeout_s),
+        progress=progress)
+    report = build_report(
+        spec.name, records, quick=args.quick, masked=masked,
+        filtered=filtered, campaign_wall_s=time.perf_counter() - t0,
+        workers=args.workers)
+
+    # diff against the PREVIOUS campaign payload before overwriting it
+    tol_kw = {}
+    if args.vr_tol_pp is not None:
+        tol_kw["vr_pp"] = args.vr_tol_pp
+    if args.wall_ratio is not None:
+        tol_kw["wall_ratio"] = args.wall_ratio
+    prev = load_section("campaign", args.root)
+    diff = diff_report(report, root=args.root, prev=prev,
+                       tol=Tolerances(**tol_kw))
+
+    payload_extra = {k: v for k, v in report.payload().items()
+                     if k != "rows"}
+    write_bench("campaign", report.records, root=args.root,
+                **payload_extra)
+
+    print(report.render())
+    print()
+    print(diff.render())
+
+    failures = report.gate_failures()
+    gate_bad = bool(failures or diff.regressions)
+    if gate_bad:
+        print(f"\nCAMPAIGN GATE FAILED: {len(failures)} report "
+              f"failures, {len(diff.regressions)} regressions",
+              file=sys.stderr)
+    if args.no_gate:
+        return 0
+    return 1 if gate_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,8 +33,8 @@ import numpy as np
 
 from repro.sim import EdgeNodeSim, SimConfig, paper_capacity_units
 from repro.sim.federation import EdgeFederation
-from repro.sim.scenario import (SCENARIOS, FleetSpec, Scenario,
-                                TenantClassSpec, TopologySpec, run_scenario)
+from repro.sim.scenario import (FleetSpec, Scenario, TenantClassSpec,
+                                TopologySpec, run_scenario)
 from repro.sim.workload import (StreamWorkload, make_game_fleet,
                                 make_stream_fleet)
 
@@ -139,55 +139,62 @@ def fleet_scale_sweep(quick: bool = False, repeats: int = 2) -> list[dict]:
     """Batched vs vectorized on 4-node federations swept to ≥1M
     tenant-seconds (32 tenants per node — the paper's per-node fleet).
 
-    ``policy="none"`` rows isolate pure engine throughput (no Procedure-1
-    rounds); ``sdps`` rows include the controller cost both engines
-    share, which compresses the engine gap. Each row cross-checks that
-    both engines produced the bitwise-identical FederationResult; in
-    quick mode (the CI smoke) a mismatch raises instead of just being
-    recorded, so fleet-scale engine regressions fail the build.
+    The fleets and policies come from the campaign registry's
+    ``ENGINE_GRID`` (``ENGINE_GRID_QUICK`` for the CI smoke) — the
+    same cells ``benchmarks.campaign`` fans out — paired up here so
+    each row keeps the engine-vs-engine schema of the BENCH_fedscale
+    trajectory. ``policy="none"`` rows isolate pure engine throughput
+    (no Procedure-1 rounds); ``sdps`` rows include the controller cost
+    both engines share, which compresses the engine gap. Each row
+    cross-checks that both engines produced the bitwise-identical
+    FederationResult; in quick mode (the CI smoke) a mismatch raises
+    instead of just being recorded, so fleet-scale engine regressions
+    fail the build.
     """
+    from repro.campaign.registry import ENGINE_GRID, ENGINE_GRID_QUICK
+    from repro.campaign.spec import expand_grid
+
     if quick:
-        configs = [("stream", 2, 8, 600, 300)]
         repeats = 1
-    else:
-        configs = [
-            # 128 tenants × 8000 s = 1.024M tenant-seconds
-            ("stream", 4, 32, 8000, 300),
-            # finer scaling cadence: 2× the chunks and rounds
-            ("stream", 4, 32, 8000, 150),
-            # game fleet: ~25 req/s per tenant keeps this shorter run
-            # (393k t-s) jitter-bound — the honest worst case
-            ("game", 4, 32, 3072, 300),
-        ]
+    cells, _ = expand_grid(ENGINE_GRID_QUICK if quick else ENGINE_GRID)
+    pairs: dict = {}
+    for cell in cells:
+        pairs.setdefault((cell.scenario.name, cell.policy),
+                         {})[cell.engine] = cell
     rows = []
-    for workload, n_nodes, per_node, duration, ri in configs:
-        ts = n_nodes * per_node * duration
-        for policy in ("none", "sdps"):
-            row = {
-                "workload": workload, "n_nodes": n_nodes,
-                "tenants_per_node": per_node, "duration_s": duration,
-                "round_interval": ri, "policy": policy,
-                "tenant_seconds": ts,
-            }
-            results = {}
-            for engine in ("vectorized", "batched"):
-                walls = []
-                for _ in range(repeats):
-                    fed = _fleet_fed(workload, n_nodes, per_node, duration,
-                                     ri, policy, engine)
-                    t0 = time.perf_counter()
-                    results[engine] = fed.run()
-                    walls.append(time.perf_counter() - t0)
-                row[f"{engine}_wall_s"] = min(walls)
-                row[f"{engine}_ts_per_s"] = ts / min(walls)
-            row["speedup_batched_vs_vectorized"] = (
-                row["vectorized_wall_s"] / row["batched_wall_s"])
-            row["bitwise_identical"] = _federation_results_identical(
-                results["vectorized"], results["batched"])
-            if quick and not row["bitwise_identical"]:
-                raise AssertionError(
-                    f"engine divergence on {row}: batched != vectorized")
-            rows.append(row)
+    for (_, policy), by_engine in pairs.items():
+        sc = next(iter(by_engine.values())).scenario
+        ts = sc.fleet.size * sc.duration_s
+        row = {
+            "workload": sc.fleet.classes[0].kind,
+            "n_nodes": sc.topology.n_nodes,
+            "tenants_per_node": sc.fleet.size // sc.topology.n_nodes,
+            "duration_s": sc.duration_s,
+            "round_interval": sc.round_interval, "policy": policy,
+            "tenant_seconds": ts,
+        }
+        results = {}
+        for engine in ("vectorized", "batched"):
+            csc = by_engine[engine].scenario_with_axes()
+            walls = []
+            for _ in range(max(repeats, 1)):
+                # built here, timed below: construction (placement
+                # draws) stays outside the measured run() wall
+                fed = EdgeFederation(csc.fleet.build(),
+                                     csc.federation_config(policy))
+                t0 = time.perf_counter()
+                results[engine] = fed.run()
+                walls.append(time.perf_counter() - t0)
+            row[f"{engine}_wall_s"] = min(walls)
+            row[f"{engine}_ts_per_s"] = ts / min(walls)
+        row["speedup_batched_vs_vectorized"] = (
+            row["vectorized_wall_s"] / row["batched_wall_s"])
+        row["bitwise_identical"] = _federation_results_identical(
+            results["vectorized"], results["batched"])
+        if quick and not row["bitwise_identical"]:
+            raise AssertionError(
+                f"engine divergence on {row}: batched != vectorized")
+        rows.append(row)
     return rows
 
 
@@ -383,47 +390,51 @@ def forecast_sweep(quick: bool = False, repeats: int = 3) -> list[dict]:
     mean non-violated latency, forecast overhead, and min-of-``repeats``
     walls. Raises on any non-finite VR — in the CI ``--quick`` smoke a
     broken forecast path fails the build instead of persisting NaN."""
+    from repro.campaign.registry import FORECAST_GRID
+    from repro.campaign.spec import expand_grid
+
     if quick:
         repeats = 1
     rows = []
-    for name in ("proactive_game_32", "proactive_face_detection"):
-        sc = SCENARIOS[name]
-        base_vr: float | None = None
-        for spol in sc.scaling_policies:
-            walls, res = [], None
-            for _ in range(max(repeats, 1)):
-                t0 = time.perf_counter()
-                res = run_scenario(sc, policies=("sdps",),
-                                   scaling_policies=(spol,), quick=quick)
-                walls.append(time.perf_counter() - t0)
-            oc = res.outcomes["sdps"]
-            if not math.isfinite(oc.violation_rate):
-                raise AssertionError(
-                    f"{name}/{spol}: non-finite VR {oc.violation_rate}")
-            if spol == "reactive":
-                base_vr = oc.violation_rate
-            fr = res.results["sdps"]
-            fc_walls = [w for r in fr.node_results.values()
-                        for w in r.overhead_forecast_s]
-            rows.append({
-                "scenario": name,
-                "scaling_policy": spol,
-                "forecaster": sc.forecaster,
-                "tenants": res.scenario.fleet.size,
-                "n_nodes": res.scenario.topology.n_nodes,
-                "duration_s": res.scenario.duration_s,
-                "round_interval": res.scenario.round_interval,
-                "violation_rate": oc.violation_rate,
-                "vr_delta_vs_reactive": (oc.violation_rate - base_vr
-                                         if base_vr is not None else 0.0),
-                "nonviolated_latency_s": _nonviolated_latency_s(fr),
-                "mean_forecast_overhead_s": (sum(fc_walls) / len(fc_walls)
-                                             if fc_walls else 0.0),
-                "max_round_overhead_s": oc.max_round_overhead_s,
-                "replaced": oc.replaced,
-                "cloud": oc.cloud,
-                "wall_s": min(walls),
-            })
+    base_vr: dict[str, float] = {}      # per-scenario reactive baseline
+    cells, _ = expand_grid(FORECAST_GRID)
+    for cell in cells:
+        name, spol = cell.scenario.name, cell.scaling_policy
+        sc = cell.scenario_with_axes()
+        walls, res = [], None
+        for _ in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            res = run_scenario(sc, policies=(cell.policy,),
+                               scaling_policies=(spol,), quick=quick)
+            walls.append(time.perf_counter() - t0)
+        oc = res.outcomes[cell.policy]
+        if not math.isfinite(oc.violation_rate):
+            raise AssertionError(
+                f"{name}/{spol}: non-finite VR {oc.violation_rate}")
+        if spol == "reactive":
+            base_vr[name] = oc.violation_rate
+        fr = res.results[cell.policy]
+        fc_walls = [w for r in fr.node_results.values()
+                    for w in r.overhead_forecast_s]
+        rows.append({
+            "scenario": name,
+            "scaling_policy": spol,
+            "forecaster": sc.forecaster,
+            "tenants": res.scenario.fleet.size,
+            "n_nodes": res.scenario.topology.n_nodes,
+            "duration_s": res.scenario.duration_s,
+            "round_interval": res.scenario.round_interval,
+            "violation_rate": oc.violation_rate,
+            "vr_delta_vs_reactive": (oc.violation_rate - base_vr[name]
+                                     if name in base_vr else 0.0),
+            "nonviolated_latency_s": _nonviolated_latency_s(fr),
+            "mean_forecast_overhead_s": (sum(fc_walls) / len(fc_walls)
+                                         if fc_walls else 0.0),
+            "max_round_overhead_s": oc.max_round_overhead_s,
+            "replaced": oc.replaced,
+            "cloud": oc.cloud,
+            "wall_s": min(walls),
+        })
     return rows
 
 
@@ -436,28 +447,33 @@ def scenario_walls(quick: bool = False, repeats: int = 3) -> list[dict]:
     what a scenario runs. Raises on any non-finite violation rate, so
     a broken registry entry fails the build instead of persisting NaN.
     """
+    from repro.campaign.registry import SCENARIO_WALLS_GRID
+    from repro.campaign.spec import expand_grid
+
     if quick:
         repeats = 1
     rows = []
-    for name, sc in SCENARIOS.items():
+    cells, _ = expand_grid(SCENARIO_WALLS_GRID)
+    for cell in cells:
+        name, sc = cell.scenario.name, cell.scenario_with_axes()
         walls, res = [], None
         for _ in range(max(repeats, 1)):
             t0 = time.perf_counter()
-            # one scaling policy per wall (the scenario's first entry)
-            # so sweep scenarios stay one comparable row; the forecast
+            # one scaling policy per wall (the grid pins reactive) so
+            # sweep scenarios stay one comparable row; the forecast
             # section owns the reactive-vs-proactive comparison
-            res = run_scenario(sc, policies=("sdps",),
-                               scaling_policies=sc.scaling_policies[:1],
+            res = run_scenario(sc, policies=(cell.policy,),
+                               scaling_policies=(cell.scaling_policy,),
                                quick=quick)
             walls.append(time.perf_counter() - t0)
-        oc = res.outcomes["sdps"]
+        oc = res.outcomes[cell.policy]
         if not math.isfinite(oc.violation_rate):
             raise AssertionError(
                 f"scenario {name}: non-finite VR {oc.violation_rate}")
         run_sc = res.scenario           # the quick() variant when quick
         rows.append({
             "scenario": name,
-            "policy": "sdps",
+            "policy": cell.policy,
             "n_nodes": run_sc.topology.n_nodes,
             "tenants": run_sc.fleet.size,
             "duration_s": run_sc.duration_s,
@@ -473,8 +489,8 @@ def scenario_walls(quick: bool = False, repeats: int = 3) -> list[dict]:
 
 
 # ------------------------------------------------------------ resilience
-CHAOS_SCENARIOS = ("flapping_node", "degraded_node_midrun",
-                   "wan_spike_storm", "serving_timeout_retry")
+# one source of truth for the chaos list: the campaign registry
+from repro.campaign.registry import CHAOS_SCENARIOS  # noqa: E402,F401
 
 
 def resilience_sweep(quick: bool = False, repeats: int = 2) -> list[dict]:
@@ -486,46 +502,52 @@ def resilience_sweep(quick: bool = False, repeats: int = 2) -> list[dict]:
     and shed counts. Raises on a non-finite VR or a request-conservation
     violation, so a broken fault path fails the CI ``--quick`` smoke
     instead of persisting garbage (BENCH_resilience.json)."""
+    from repro.campaign.registry import RESILIENCE_GRID
+    from repro.campaign.spec import expand_grid
+
     if quick:
         repeats = 1
     rows = []
-    for name in CHAOS_SCENARIOS:
-        sc = SCENARIOS[name]
-        base_vr: float | None = None
-        for pol in sc.policies:
-            walls, res = [], None
-            for _ in range(max(repeats, 1)):
-                t0 = time.perf_counter()
-                res = run_scenario(sc, policies=(pol,), quick=quick)
-                walls.append(time.perf_counter() - t0)
-            oc = res.outcomes[pol]
-            if not math.isfinite(oc.violation_rate):
-                raise AssertionError(
-                    f"{name}/{pol}: non-finite VR {oc.violation_rate}")
-            if oc.requests_conserved is False:
-                raise AssertionError(
-                    f"{name}/{pol}: request conservation violated")
-            if pol == "none":
-                base_vr = oc.violation_rate
-            fr = res.results[pol]
-            rows.append({
-                "scenario": name,
-                "engine": sc.engine,
-                "policy": pol,
-                "n_nodes": res.scenario.topology.n_nodes,
-                "tenants": res.scenario.fleet.size,
-                "duration_s": res.scenario.duration_s,
-                "violation_rate": oc.violation_rate,
-                "vr_delta_vs_none": (oc.violation_rate - base_vr
-                                     if base_vr is not None else 0.0),
-                "nonviolated_latency_s": _nonviolated_latency_s(fr),
-                "failed_nodes": len(fr.failed_nodes),
-                "recovered_nodes": len(fr.recovered_nodes),
-                "recovered_tenants": oc.recovered,
-                "replaced": oc.replaced,
-                "cloud": oc.cloud,
-                "shed": oc.shed,
-                "requests_conserved": oc.requests_conserved,
-                "wall_s": min(walls),
-            })
+    base_vr: dict[str, float] = {}      # per-scenario `none` baseline
+    cells, _ = expand_grid(RESILIENCE_GRID)
+    for cell in cells:
+        name, pol = cell.scenario.name, cell.policy
+        sc = cell.scenario_with_axes()
+        walls, res = [], None
+        for _ in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            res = run_scenario(sc, policies=(pol,),
+                               scaling_policies=(cell.scaling_policy,),
+                               quick=quick)
+            walls.append(time.perf_counter() - t0)
+        oc = res.outcomes[pol]
+        if not math.isfinite(oc.violation_rate):
+            raise AssertionError(
+                f"{name}/{pol}: non-finite VR {oc.violation_rate}")
+        if oc.requests_conserved is False:
+            raise AssertionError(
+                f"{name}/{pol}: request conservation violated")
+        if pol == "none":
+            base_vr[name] = oc.violation_rate
+        fr = res.results[pol]
+        rows.append({
+            "scenario": name,
+            "engine": sc.engine,
+            "policy": pol,
+            "n_nodes": res.scenario.topology.n_nodes,
+            "tenants": res.scenario.fleet.size,
+            "duration_s": res.scenario.duration_s,
+            "violation_rate": oc.violation_rate,
+            "vr_delta_vs_none": (oc.violation_rate - base_vr[name]
+                                 if name in base_vr else 0.0),
+            "nonviolated_latency_s": _nonviolated_latency_s(fr),
+            "failed_nodes": len(fr.failed_nodes),
+            "recovered_nodes": len(fr.recovered_nodes),
+            "recovered_tenants": oc.recovered,
+            "replaced": oc.replaced,
+            "cloud": oc.cloud,
+            "shed": oc.shed,
+            "requests_conserved": oc.requests_conserved,
+            "wall_s": min(walls),
+        })
     return rows

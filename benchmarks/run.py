@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import platform
 import sys
 import time
 
@@ -22,45 +21,16 @@ def _csv(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
 
 
-def _machine_info() -> dict:
-    info = {
-        "platform": platform.platform(),
-        "python": platform.python_version(),
-        "cpus": os.cpu_count(),
-    }
-    try:
-        import numpy
-        info["numpy"] = numpy.__version__
-    except Exception:
-        pass
-    try:
-        with open("/proc/cpuinfo") as f:
-            for line in f:
-                if line.lower().startswith("model name"):
-                    info["cpu_model"] = line.split(":", 1)[1].strip()
-                    break
-    except OSError:
-        pass
-    return info
-
-
 def _persist_section(section: str, rows, quick: bool) -> None:
-    """Root-level BENCH_<section>.json: the perf trajectory future PRs
-    diff against. Quick (CI-sized) runs are not comparable walls, so
-    they are never persisted."""
+    """Root-level BENCH_<section>.json (the shared
+    :mod:`repro.campaign.benchio` schema): the perf trajectory future
+    PRs diff against. Quick (CI-sized) runs are not comparable walls,
+    so they are never persisted."""
     if quick:
         return
-    payload = {
-        "section": section,
-        "machine": _machine_info(),
-        "written_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
-        "rows": rows,
-    }
-    path = f"BENCH_{section}.json"
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, default=str)
-        f.write("\n")
-    print(f"# wrote {path}", file=sys.stderr)
+    from repro.campaign.benchio import write_bench
+
+    write_bench(section, rows)
 
 
 def main() -> None:

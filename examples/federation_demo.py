@@ -3,7 +3,13 @@
   PYTHONPATH=src python examples/federation_demo.py [--scenario NAME]
   [--nodes N] [--tenants N] [--duration S] [--seed S] [--engine E]
   [--placement P] [--policy SP] [--forecaster F] [--quick]
-  [--list-scenarios]
+  [--list-scenarios] [--campaign NAME] [--list-campaigns]
+
+``--campaign <name>`` runs a whole named sweep from the campaign
+registry (``repro.campaign``) instead of a single scenario and prints
+the aggregated CampaignReport table; ``--list-campaigns`` lists the
+available campaigns. Single-scenario overrides don't apply to
+campaigns — their axes are the campaign spec's grids.
 
 ``--policy`` overrides the scenario's scaling-policy sweep with a single
 ScalingPolicy (``reactive`` | ``proactive`` | ``hybrid``) and
@@ -91,10 +97,37 @@ def main():
                     help="forecaster used by proactive/hybrid scaling")
     ap.add_argument("--quick", action="store_true",
                     help="short-duration smoke variant")
+    ap.add_argument("--campaign", default=None,
+                    help="run a named campaign sweep (repro.campaign) "
+                         "and print its report instead of one scenario")
+    ap.add_argument("--list-campaigns", action="store_true",
+                    help="list campaign registry entries and exit")
     args = ap.parse_args()
 
     if args.list_scenarios:
         print(format_registry())
+        return
+    if args.list_campaigns:
+        from repro.campaign import format_campaigns
+        print(format_campaigns())
+        return
+    if args.campaign is not None:
+        import time
+
+        from repro.campaign import (build_report, expand_campaign,
+                                    get_campaign, run_cells)
+        spec = get_campaign(args.campaign)
+        cells, masked, filtered = expand_campaign(spec, verbose=True)
+        t0 = time.perf_counter()
+        records = run_cells(cells, quick=args.quick, workers=2,
+                            cell_timeout_s=spec.cell_timeout_s)
+        report = build_report(
+            spec.name, records, quick=args.quick, masked=masked,
+            filtered=filtered,
+            campaign_wall_s=time.perf_counter() - t0, workers=2)
+        print(report.render())
+        if report.gate_failures():
+            raise SystemExit(1)
         return
 
     sc = _apply_overrides(SCENARIOS[args.scenario], args)

@@ -1,0 +1,155 @@
+"""Process fan-out for campaign cells: timeout + crash isolation.
+
+One child process per cell (forked when the platform allows, so
+test-registered scenarios and injected ``cell_fn`` overrides are
+inherited without pickling), results shipped back over a ``Pipe``, and
+a sliding window of ``workers`` concurrent children multiplexed with
+:func:`multiprocessing.connection.wait`. Three failure modes are
+captured as structured records instead of killing the campaign:
+
+* the cell raises — the child catches ``BaseException`` and reports
+  ``status="error"`` with the message and traceback;
+* the child dies outright (segfault, ``os._exit``) — the parent sees
+  EOF on the pipe and reports ``status="crash"`` with the exit code;
+* the cell overruns ``cell_timeout_s`` — the parent terminates the
+  child and reports ``status="timeout"``.
+
+``workers <= 0`` runs every cell inline in the parent (no processes,
+no timeout enforcement) — the mode tests use for determinism checks.
+
+Per-cell seeds are deterministic because the seed IS an axis of the
+cell: the child runs ``cell.scenario_with_axes()`` (which pins
+``scenario.seed`` to the cell's seed) and every engine derives its RNG
+streams from that. The parent deliberately never resolves engine
+backends before forking, so a lazy jax backend is only imported inside
+the child that needs it.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import time
+import traceback
+
+from repro.campaign.spec import RunSpec
+
+
+def run_cell(cell: RunSpec, quick: bool) -> dict:
+    """Run one cell to a structured record (the default ``cell_fn``)."""
+    from repro.sim.engines import resolve_engine
+    from repro.sim.scenario import run_scenario
+
+    sc = cell.scenario_with_axes()
+    t0 = time.perf_counter()
+    res = run_scenario(sc, policies=(cell.policy,),
+                       scaling_policies=(cell.scaling_policy,),
+                       quick=quick)
+    wall = time.perf_counter() - t0
+    ran = res.scenario
+    rec = cell.record_stub()
+    rec.update(
+        status="ok",
+        duration_s=float(resolve_engine(ran.engine).scenario_duration(ran)),
+        tenants=ran.fleet.size,
+        n_nodes=ran.topology.n_nodes,
+        wall_s=wall,
+    )
+    rec.update(res.outcomes[cell.policy].to_record())
+    return rec
+
+
+def _failure_record(cell: RunSpec, status: str, **extra) -> dict:
+    rec = cell.record_stub()
+    rec.update(status=status, **extra)
+    return rec
+
+
+def _cell_worker(conn, cell: RunSpec, quick: bool, cell_fn) -> None:
+    try:
+        rec = cell_fn(cell, quick)
+    except BaseException as e:  # noqa: BLE001 — isolation is the point
+        rec = _failure_record(cell, "error", error=f"{type(e).__name__}: {e}",
+                              traceback=traceback.format_exc())
+    try:
+        conn.send(rec)
+    finally:
+        conn.close()
+
+
+def _mp_context():
+    try:
+        return multiprocessing.get_context("fork")
+    except ValueError:          # pragma: no cover — non-POSIX fallback
+        return multiprocessing.get_context("spawn")
+
+
+def run_cells(cells: list[RunSpec], *, quick: bool = False,
+              workers: int = 2, cell_timeout_s: float = 900.0,
+              cell_fn=run_cell, progress=None) -> list[dict]:
+    """Run every cell, returning one record per cell IN CELL ORDER no
+    matter how the children finish. ``progress`` (optional) is called
+    with each finished record."""
+    if workers <= 0:
+        out = []
+        for cell in cells:
+            try:
+                rec = cell_fn(cell, quick)
+            except BaseException as e:  # noqa: BLE001
+                rec = _failure_record(cell, "error",
+                                      error=f"{type(e).__name__}: {e}",
+                                      traceback=traceback.format_exc())
+            if progress is not None:
+                progress(rec)
+            out.append(rec)
+        return out
+
+    ctx = _mp_context()
+    records: list = [None] * len(cells)
+    pending = list(enumerate(cells))     # not yet launched
+    live: dict = {}                      # conn -> (idx, proc, deadline)
+
+    def launch(idx: int, cell: RunSpec) -> None:
+        parent, child = ctx.Pipe(duplex=False)
+        proc = ctx.Process(target=_cell_worker,
+                           args=(child, cell, quick, cell_fn),
+                           name=f"campaign-{cell.cell_id}")
+        proc.start()
+        child.close()
+        live[parent] = (idx, proc, time.monotonic() + cell_timeout_s)
+
+    def finish(conn, rec: dict) -> None:
+        idx, proc, _ = live.pop(conn)
+        conn.close()
+        proc.join()
+        records[idx] = rec
+        if progress is not None:
+            progress(rec)
+
+    while pending or live:
+        while pending and len(live) < workers:
+            launch(*pending.pop(0))
+        now = time.monotonic()
+        budget = max(0.05, min(dl for _, _, dl in live.values()) - now)
+        ready = multiprocessing.connection.wait(list(live), timeout=budget)
+        for conn in ready:
+            idx, proc, _ = live[conn]
+            try:
+                rec = conn.recv()
+            except EOFError:
+                proc.join()
+                rec = _failure_record(
+                    cells[idx], "crash",
+                    error=f"worker died (exitcode {proc.exitcode})",
+                    exitcode=proc.exitcode)
+            finish(conn, rec)
+        now = time.monotonic()
+        for conn in [c for c, (_, _, dl) in live.items() if dl <= now]:
+            idx, proc, _ = live[conn]
+            proc.terminate()
+            proc.join(5.0)
+            if proc.is_alive():         # pragma: no cover — stuck child
+                proc.kill()
+                proc.join()
+            finish(conn, _failure_record(
+                cells[idx], "timeout",
+                error=f"cell exceeded {cell_timeout_s:.0f}s timeout"))
+    return records

@@ -39,7 +39,7 @@ This is what makes the serving path usable as a regression surface.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -91,6 +91,10 @@ class ServingNode:
         # SLO violations, never silently dropped
         self.shed_lats: list[float] = []
         self.shed_slos: list[float] = []
+        # every Cloud/shed sample keyed by tenant, so the federation can
+        # aggregate token-level latency bands per tenant class (the
+        # Edge-completed samples come off ``engine.completed`` directly)
+        self.lat_by_tenant: dict[str, list[float]] = {}
         # collected RoundReports (overhead + action streams)
         self.reports: list = []
 
@@ -102,11 +106,13 @@ class ServingNode:
         self.ctrl.monitor.record_request(tenant, latency, slo)
         self.cloud_lats.append(latency)
         self.cloud_slos.append(slo)
+        self.lat_by_tenant.setdefault(tenant, []).append(latency)
 
     def record_shed(self, tenant: str, latency: float, slo: float) -> None:
         self.ctrl.monitor.record_request(tenant, latency, slo)
         self.shed_lats.append(latency)
         self.shed_slos.append(slo)
+        self.lat_by_tenant.setdefault(tenant, []).append(latency)
 
     def finalize(self, slo_of: dict[str, float]) -> SimResult:
         mon = self.ctrl.monitor
@@ -145,6 +151,11 @@ class ServingFederationResult(FederationResult):
     # the PR-6 conservation invariant, asserted by _finalize:
     # submitted == completed + cloud_requests (+ engine strays) + shed
     requests_conserved: bool = True
+    # TOKEN-level latency bands per tenant class, over every accounted
+    # request (Edge-completed + Cloud + shed): {class prefix:
+    # {"p50", "p95", "p99", "n"}} in virtual seconds — the real-decode
+    # companion to the latency-model band fractions
+    token_latency_bands: dict = field(default_factory=dict)
 
 
 class ServingFederation:
@@ -733,6 +744,22 @@ class ServingFederation:
                 f"request conservation violated: submitted "
                 f"{self._submitted} != completed {completed} + cloud "
                 f"{cloud_req + strays} + shed {shed}")
+        # token-level latency bands per tenant class, over every
+        # accounted sample: Edge-completed real decode timelines plus
+        # the Cloud/shed latencies already recorded per tenant
+        by_class: dict[str, list] = {}
+        for n in self.nodes:
+            for rs in n.engine.completed:
+                by_class.setdefault(
+                    self.cls[rs.req.tenant].prefix, []).append(rs.latency())
+            for tname, ls in n.lat_by_tenant.items():
+                by_class.setdefault(self.cls[tname].prefix, []).extend(ls)
+        token_bands = {
+            p: {"p50": float(np.percentile(a, 50)),
+                "p95": float(np.percentile(a, 95)),
+                "p99": float(np.percentile(a, 99)),
+                "n": float(len(a))}
+            for p, a in sorted(by_class.items()) if a}
         return ServingFederationResult(
             policy=self.cfg.policy,
             node_results=node_results,
@@ -751,4 +778,5 @@ class ServingFederation:
             shed=shed,
             submitted=self._submitted,
             requests_conserved=True,
+            token_latency_bands=token_bands,
         )

@@ -520,6 +520,35 @@ class PolicyOutcome:
     # (submitted == completed + cloud + shed), asserted post-run;
     # None on simulator engines (no request ledger)
     requests_conserved: bool | None = None
+    # serving: TOKEN-level latency bands per tenant class (measured on
+    # real decode timelines) — {class prefix: {p50, p95, p99, n}} —
+    # reported alongside the model-based band_fractions above; None on
+    # simulator engines (their latencies come from the latency model)
+    token_latency_bands: dict[str, dict[str, float]] | None = None
+
+    def to_record(self) -> dict:
+        """A flat, JSON-serializable summary row (the campaign harness
+        and the BENCH writers consume this)."""
+        rec = {
+            "policy": self.policy,
+            "scaling_policy": self.scaling_policy,
+            "violation_rate": self.violation_rate,
+            "per_node_vr": dict(self.per_node_vr),
+            "band_fractions": dict(self.band_fractions),
+            "max_round_overhead_s": self.max_round_overhead_s,
+            "mean_round_overhead_s": dict(self.mean_round_overhead_s),
+            "replaced": self.replaced,
+            "cloud": self.cloud,
+            "recovered": self.recovered,
+            "shed": self.shed,
+            "requests_conserved": self.requests_conserved,
+            "wall_s": self.wall_s,
+        }
+        if self.token_latency_bands is not None:
+            rec["token_latency_bands"] = {
+                cls: dict(bands)
+                for cls, bands in self.token_latency_bands.items()}
+        return rec
 
 
 @dataclass
@@ -541,6 +570,12 @@ class ScenarioResult:
         """The placement timeline (admissions, re-placements, failovers,
         Cloud fallbacks) of one policy's run."""
         return self.results[policy].placements
+
+    def to_records(self) -> list[dict]:
+        """One flat summary row per swept outcome (key included) —
+        the serialization seam the campaign harness aggregates."""
+        return [dict(key=key, scenario=self.name, **oc.to_record())
+                for key, oc in self.outcomes.items()]
 
     def table(self) -> str:
         sc = self.scenario
@@ -582,6 +617,17 @@ class ScenarioResult:
                 f"{key:<{pw}} {oc.violation_rate * 100:6.1f}   {per_node}"
                 f"  {bands}  {oc.replaced:5d} {oc.cloud:5d} {ovh:>8}"
                 f" {oc.wall_s:6.2f}s")
+        if any(oc.token_latency_bands for oc in self.outcomes.values()):
+            lines.append("token-level latency p50/p95/p99 per tenant "
+                         "class (s, real decode timelines):")
+            for key, oc in self.outcomes.items():
+                if not oc.token_latency_bands:
+                    continue
+                cells = "  ".join(
+                    f"{cls} {b['p50']:.2f}/{b['p95']:.2f}/{b['p99']:.2f}"
+                    f" (n={int(b['n'])})"
+                    for cls, b in oc.token_latency_bands.items())
+                lines.append(f"  {key:<{pw}} {cells}")
         worst = max((oc.max_round_overhead_s
                      for oc in self.outcomes.values()
                      if oc.policy != "none"),
@@ -662,6 +708,8 @@ def run_scenario(scenario: Scenario | str, *,
                               if p.kind == "recover" and p.node is not None),
                 shed=getattr(res, "shed", 0),
                 requests_conserved=getattr(res, "requests_conserved", None),
+                token_latency_bands=getattr(res, "token_latency_bands",
+                                            None),
             )
     return out
 

@@ -88,6 +88,25 @@ def test_node_failure_migrates_live_queues(edge_pair):
         assert all(p.source == "edge1" for p in fo)
 
 
+def test_token_latency_bands(edge_pair):
+    """Serving outcomes must report token-level latency bands per
+    tenant class (p50/p95/p99 over the real decode timelines), next to
+    the model-based band fractions, covering every accounted request
+    (Edge-completed + Cloud + shed)."""
+    for key, oc in edge_pair.outcomes.items():
+        bands = oc.token_latency_bands
+        assert bands is not None and set(bands) == {"hot", "tail"}, key
+        for b in bands.values():
+            assert 0 < b["p50"] <= b["p95"] <= b["p99"]
+            assert b["n"] > 0
+        res = edge_pair.results[key]
+        assert sum(b["n"] for b in bands.values()) == (
+            res.completed + res.cloud_requests + res.shed)
+        # the serialized record carries them too
+        rec = oc.to_record()
+        assert rec["token_latency_bands"] == bands
+
+
 def test_request_conservation(edge_pair):
     """Every submitted request is accounted exactly once: Edge-completed
     plus Cloud-serviced equals the monitor's recorded total."""
