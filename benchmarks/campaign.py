@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python -m benchmarks.campaign [--quick] \\
       [--campaign ci] [--workers 2] [--list] [--dry-run] \\
-      [--vr-tol-pp 0.5] [--wall-ratio 1.75] [--no-gate]
+      [--vr-tol-pp 0.5] [--wall-ratio 1.75] [--no-gate] \\
+      [--artifacts DIR]
 
 One command replaces the per-section smoke steps: it expands the named
 campaign (default ``ci`` — every registry scenario across the
@@ -14,7 +15,13 @@ CI artifact), and exits non-zero when the gate fails: any
 failed/timed-out cell, non-finite VR, request-conservation violation,
 engine/control-plane consistency disagreement, or VR/wall regression
 beyond tolerance against the previous campaign report and the
-per-section ``BENCH_*.json`` trajectories.
+per-section ``BENCH_*.json`` trajectories. The gate also re-measures
+the paper's overhead-per-server curve (1→32 simulated Edge servers,
+quick-sized) and fails on a non-finite value, a broken sub-second
+claim, or a >2x per-round regression vs ``BENCH_overhead.json``.
+With ``--artifacts DIR`` every cell runs under the repro.obs flight
+recorder and failed/diverged cells keep a per-cell Chrome-trace
+``trace.json`` there for upload.
 """
 from __future__ import annotations
 
@@ -51,6 +58,12 @@ def main(argv: list[str] | None = None) -> int:
                          "campaign spec's cell_timeout_s)")
     ap.add_argument("--no-gate", action="store_true",
                     help="report + persist but always exit 0")
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="trace every cell (repro.obs flight recorder) "
+                         "and write a per-cell Chrome-trace trace.json "
+                         "under DIR; after gating, traces of passing "
+                         "cells are pruned so only failed/diverged "
+                         "cells keep theirs")
     args = ap.parse_args(argv)
 
     from repro.campaign import (Tolerances, build_report, diff_report,
@@ -88,7 +101,7 @@ def main(argv: list[str] | None = None) -> int:
         cells, quick=args.quick, workers=args.workers,
         cell_timeout_s=(args.timeout if args.timeout is not None
                         else spec.cell_timeout_s),
-        progress=progress)
+        progress=progress, artifacts_dir=args.artifacts)
     report = build_report(
         spec.name, records, quick=args.quick, masked=masked,
         filtered=filtered, campaign_wall_s=time.perf_counter() - t0,
@@ -113,11 +126,59 @@ def main(argv: list[str] | None = None) -> int:
     print()
     print(diff.render())
 
+    # overhead-per-server gate: re-measure the paper's 1→32-server
+    # curve (quick-sized) and fail on a non-finite value, a broken
+    # sub-second claim, or a >2x per-round regression against the
+    # committed BENCH_overhead.json baseline
+    overhead_failures: list[str] = []
+    try:
+        from benchmarks.federation_bench import overhead_sweep
+        orows = overhead_sweep(quick=True)
+    except AssertionError as e:
+        overhead_failures.append(str(e))
+        orows = []
+    base = load_section("overhead", args.root)
+    if base and orows:
+        by_servers = {r.get("servers"): r for r in base["rows"]}
+        for r in orows:
+            old = (by_servers.get(r["servers"]) or {}) \
+                .get("round_overhead_s")
+            new = r["round_overhead_s"]
+            # sub-200us rounds are timing noise, not a trend
+            if old and old >= 2e-4 and new > 2.0 * old:
+                overhead_failures.append(
+                    f"overhead/{r['servers']}srv: round overhead "
+                    f"{old * 1e3:.3f}ms -> {new * 1e3:.3f}ms (> 2.0x)")
+    for f in overhead_failures:
+        print(f"# OVERHEAD GATE: {f}", file=sys.stderr)
+
     failures = report.gate_failures()
-    gate_bad = bool(failures or diff.regressions)
+
+    if args.artifacts:
+        # keep trace.json only for cells implicated in a gate failure
+        # or regression — CI uploads the directory as-is
+        import shutil
+
+        from repro.campaign import artifact_dir_for
+        bad = {r["cell"] for r in report.failed}
+        bad |= {f.removeprefix("cell ").split(":", 1)[0].strip()
+                for f in failures}
+        bad |= {r.split(":", 1)[0] for r in diff.regressions}
+        kept = 0
+        for rec in report.records:
+            cell_dir = artifact_dir_for(rec["cell"], args.artifacts)
+            if rec["cell"] in bad:
+                kept += 1
+            else:
+                shutil.rmtree(cell_dir, ignore_errors=True)
+        print(f"# kept trace artifacts for {kept} failed/diverged "
+              f"cells under {args.artifacts}", file=sys.stderr)
+
+    gate_bad = bool(failures or diff.regressions or overhead_failures)
     if gate_bad:
         print(f"\nCAMPAIGN GATE FAILED: {len(failures)} report "
-              f"failures, {len(diff.regressions)} regressions",
+              f"failures, {len(diff.regressions)} regressions, "
+              f"{len(overhead_failures)} overhead regressions",
               file=sys.stderr)
     if args.no_gate:
         return 0

@@ -551,3 +551,73 @@ def resilience_sweep(quick: bool = False, repeats: int = 2) -> list[dict]:
             "wall_s": min(walls),
         })
     return rows
+
+
+# ------------------------------------------------------------------ overhead
+def overhead_sweep(quick: bool = False, repeats: int = 3) -> list[dict]:
+    """``overhead``: the paper's overhead-vs-number-of-Edge-servers
+    curve (Fig. 2 / the §5 headline "sub-second overhead per Edge
+    server when 32 Edge servers are deployed on a single Edge node").
+
+    1→32 simulated Edge servers (tenants) run on ONE vectorized node
+    with a :class:`repro.obs.FlightRecorder` attached, so the
+    per-round walls come from the recorder's full phase pipeline —
+    monitor feed, forecast, priority scoring, classification, eviction
+    cascade, actuation — not just the three coarse overhead lists.
+    ``per_server_overhead_s`` is (monitoring + priority + forecast +
+    scaling) / servers; the run raises on a non-finite value and each
+    row carries the paper's ``sub_second`` verdict, so the CI quick
+    gate fails if the analogue claim ever breaks
+    (BENCH_overhead.json)."""
+    from repro.obs import FlightRecorder
+
+    if quick:
+        repeats = 1
+    duration, ri = (240, 60) if quick else (1200, 300)
+    rows = []
+    for n in (1, 2, 4, 8, 16, 32):
+        best = None
+        for _ in range(max(repeats, 1)):
+            rec = FlightRecorder()
+            cfg = SimConfig(
+                policy="sdps", duration_s=duration, round_interval=ri,
+                capacity_units=paper_capacity_units(n, headroom=16),
+                seed=7, engine="vectorized", recorder=rec)
+            res = EdgeNodeSim(
+                make_game_fleet(n, np.random.default_rng(42)), cfg).run()
+            ph = res.overhead_phases
+
+            def mean(k: str) -> float:
+                v = ph.get(k, [])
+                return float(np.mean(v)) if v else 0.0
+
+            monitoring = mean("monitor_feed")
+            scaling = mean("scaling")       # classification+eviction+
+            #                                 actuation live inside it
+            total = monitoring + mean("priority") + mean("forecast") \
+                + scaling
+            if best is None or total < best["round_overhead_s"]:
+                best = {
+                    "servers": n,
+                    "rounds": len(ph.get("scaling", [])),
+                    "monitoring_s": monitoring,
+                    "priority_s": mean("priority"),
+                    "forecast_s": mean("forecast"),
+                    "scaling_s": scaling,
+                    "classification_s": mean("classification"),
+                    "eviction_s": mean("eviction"),
+                    "actuation_s": mean("actuation"),
+                    "round_overhead_s": total,
+                    "per_server_overhead_s": total / n,
+                    "sub_second": bool(total / n < 1.0),
+                }
+        if not math.isfinite(best["per_server_overhead_s"]):
+            raise AssertionError(
+                f"overhead sweep: non-finite per-server overhead at "
+                f"{n} servers")
+        rows.append(best)
+    if not rows[-1]["sub_second"]:
+        raise AssertionError(
+            f"paper claim violated: {rows[-1]['per_server_overhead_s']:.3f}"
+            f"s per server at 32 servers (must be sub-second)")
+    return rows

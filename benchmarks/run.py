@@ -239,6 +239,21 @@ def main() -> None:
                 f"conserved={r['requests_conserved']}")
         _persist_section("resilience", rows, args.quick)
 
+    if want("overhead"):
+        from benchmarks import federation_bench
+        rows = federation_bench.overhead_sweep(quick=args.quick)
+        results["overhead"] = rows
+        for r in rows:
+            _csv(
+                f"overhead/{r['servers']}srv",
+                r["per_server_overhead_s"] * 1e6,
+                f"round={r['round_overhead_s'] * 1e3:.3f}ms "
+                f"(mon={r['monitoring_s'] * 1e3:.3f} "
+                f"pri={r['priority_s'] * 1e3:.3f} "
+                f"scl={r['scaling_s'] * 1e3:.3f}ms) "
+                f"sub-second={r['sub_second']}")
+        _persist_section("overhead", rows, args.quick)
+
     if want("roofline"):
         from benchmarks.roofline_report import roofline_table
         rows = roofline_table()

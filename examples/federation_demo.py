@@ -97,6 +97,11 @@ def main():
                     help="forecaster used by proactive/hybrid scaling")
     ap.add_argument("--quick", action="store_true",
                     help="short-duration smoke variant")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="run under the repro.obs flight recorder and "
+                         "write a Chrome-trace/Perfetto trace.json "
+                         "(load it at ui.perfetto.dev); results are "
+                         "bitwise-identical to an untraced run")
     ap.add_argument("--campaign", default=None,
                     help="run a named campaign sweep (repro.campaign) "
                          "and print its report instead of one scenario")
@@ -131,7 +136,15 @@ def main():
         return
 
     sc = _apply_overrides(SCENARIOS[args.scenario], args)
-    print(run_scenario(sc, quick=args.quick).table())
+    if args.trace is not None:
+        sc = dataclasses.replace(sc, trace=True)
+    res = run_scenario(sc, quick=args.quick)
+    print(res.table())
+    if args.trace is not None:
+        res.write_trace(args.trace)
+        n = sum(len(r.events) for r in res.results.values())
+        print(f"wrote {args.trace}: {n} flight-recorder events "
+              f"(open at ui.perfetto.dev or chrome://tracing)")
 
 
 if __name__ == "__main__":

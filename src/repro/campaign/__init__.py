@@ -86,7 +86,8 @@ from repro.campaign.benchio import (SCHEMA_VERSION,  # noqa: F401
                                     load_section, machine_info, write_bench)
 from repro.campaign.diff import (DiffResult, Tolerances,  # noqa: F401
                                  diff_report)
-from repro.campaign.executor import run_cell, run_cells  # noqa: F401
+from repro.campaign.executor import (artifact_dir_for,  # noqa: F401
+                                     run_cell, run_cells)
 from repro.campaign.registry import (CAMPAIGNS,  # noqa: F401
                                      campaign_names, format_campaigns,
                                      get_campaign)

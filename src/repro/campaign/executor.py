@@ -26,19 +26,37 @@ the child that needs it.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import multiprocessing
+import os
 import time
 import traceback
 
 from repro.campaign.spec import RunSpec
 
 
-def run_cell(cell: RunSpec, quick: bool) -> dict:
-    """Run one cell to a structured record (the default ``cell_fn``)."""
+def artifact_dir_for(cell_id: str, artifacts_dir: str) -> str:
+    """Filesystem-safe per-cell artifact directory (cell ids contain
+    ``/`` separators)."""
+    return os.path.join(artifacts_dir, cell_id.replace("/", "_"))
+
+
+def run_cell(cell: RunSpec, quick: bool,
+             artifacts_dir: str | None = None) -> dict:
+    """Run one cell to a structured record (the default ``cell_fn``).
+
+    With ``artifacts_dir`` the cell runs under a flight recorder
+    (``scenario.trace=True`` — observability-only, results unchanged)
+    and writes a Chrome-trace ``trace.json`` per cell under
+    ``<artifacts_dir>/<sanitized cell id>/``; the record carries its
+    path as ``trace_path``."""
     from repro.sim.engines import resolve_engine
     from repro.sim.scenario import run_scenario
 
     sc = cell.scenario_with_axes()
+    if artifacts_dir is not None:
+        sc = dataclasses.replace(sc, trace=True)
     t0 = time.perf_counter()
     res = run_scenario(sc, policies=(cell.policy,),
                        scaling_policies=(cell.scaling_policy,),
@@ -54,6 +72,12 @@ def run_cell(cell: RunSpec, quick: bool) -> dict:
         wall_s=wall,
     )
     rec.update(res.outcomes[cell.policy].to_record())
+    if artifacts_dir is not None:
+        cell_dir = artifact_dir_for(cell.cell_id, artifacts_dir)
+        os.makedirs(cell_dir, exist_ok=True)
+        trace_path = os.path.join(cell_dir, "trace.json")
+        res.write_trace(trace_path)
+        rec["trace_path"] = trace_path
     return rec
 
 
@@ -84,10 +108,15 @@ def _mp_context():
 
 def run_cells(cells: list[RunSpec], *, quick: bool = False,
               workers: int = 2, cell_timeout_s: float = 900.0,
-              cell_fn=run_cell, progress=None) -> list[dict]:
+              cell_fn=run_cell, progress=None,
+              artifacts_dir: str | None = None) -> list[dict]:
     """Run every cell, returning one record per cell IN CELL ORDER no
     matter how the children finish. ``progress`` (optional) is called
-    with each finished record."""
+    with each finished record. ``artifacts_dir`` makes the default
+    ``cell_fn`` trace every cell and drop a per-cell ``trace.json``
+    there (ignored for a custom ``cell_fn``)."""
+    if artifacts_dir is not None and cell_fn is run_cell:
+        cell_fn = functools.partial(run_cell, artifacts_dir=artifacts_dir)
     if workers <= 0:
         out = []
         for cell in cells:

@@ -26,7 +26,7 @@ from repro.sim.engines import ENGINE_BACKENDS
 VOLATILE_KEYS = frozenset({
     "wall_s", "walls", "machine", "written_at", "campaign_wall_s",
     "workers", "traceback", "max_round_overhead_s",
-    "mean_round_overhead_s",
+    "mean_round_overhead_s", "mean_overhead_per_server_s", "trace_path",
 })
 
 #: |ΔVR| allowed between a "tolerance"-contract engine and its bitwise

@@ -187,7 +187,9 @@ class DyverseController:
                  scaling_policy: str = "reactive",
                  forecaster: str | Forecaster = "ewma",
                  forecast_window: int = 16,
-                 hybrid_vr_band: float = 0.15):
+                 hybrid_vr_band: float = 0.15,
+                 recorder=None,
+                 node_name: str = "node"):
         if policy not in POLICIES and policy != "none":
             raise ValueError(f"policy {policy!r} not in {POLICIES + ('none',)}")
         if control_plane not in CONTROL_PLANES:
@@ -238,6 +240,12 @@ class DyverseController:
         # LIFO reuse swaps the slots), and the names list is compared
         # every round as a backstop against direct registry mutation.
         self._members_epoch = 0
+        # optional repro.obs.FlightRecorder — observation only: emits
+        # typed events and per-phase walls, draws no RNG, never feeds
+        # back into a decision. None (the default) is the off path.
+        self.recorder = recorder
+        self.node_name = node_name
+        self._phase_acc: dict[str, float] | None = None
         self._dense_key: tuple | None = None
         self._dense_names: list[str] = []
         self._dense_idx: np.ndarray | None = None
@@ -375,6 +383,13 @@ class DyverseController:
     def run_round(self) -> RoundReport:
         """Procedure 1: one dynamic vertical scaling round, O(N)."""
         report = RoundReport(policy=self.policy)
+        # per-phase profiling (classification / eviction cascade /
+        # actuation) only exists while a flight recorder observes the
+        # run; the sub-timers read perf_counter around code that runs
+        # identically either way, so decisions are unperturbed
+        acc = self._phase_acc = (
+            {"classification": 0.0, "eviction": 0.0, "actuation": 0.0}
+            if self.recorder is not None else None)
         metrics = self.monitor.roll_round()
         # the closed round joins the forecast history on EVERY policy —
         # recording is deterministic numpy on Monitor-held values (no
@@ -386,6 +401,8 @@ class DyverseController:
         self._record_history()
         report.forecast_s = time.perf_counter() - t0
         if self.policy == "none":  # no dynamic vertical scaling (baseline)
+            if acc is not None:
+                self._attach_phases(report, acc)
             return report
         report.priority_update_s = self.update_priorities()
 
@@ -399,7 +416,30 @@ class DyverseController:
         report.scaling_s = time.perf_counter() - t0
         self.rounds_run += 1
         self.pool.check_invariants()
+        if acc is not None:
+            self._attach_phases(report, acc)
         return report
+
+    def _attach_phases(self, report: RoundReport, acc: dict) -> None:
+        """Flush the round's per-phase walls into the report (tracing
+        on only). ``monitor_feed`` is appended by the layer that owns
+        the chunk loop (node / fleet stepper)."""
+        report.phases = {
+            "forecast": report.forecast_s,
+            "priority": report.priority_update_s,
+            "classification": acc["classification"],
+            "eviction": acc["eviction"],
+            "actuation": acc["actuation"],
+            "scaling": report.scaling_s,
+        }
+        self._phase_acc = None
+
+    def _emit(self, kind: str, name: str | None, st, **kw) -> None:
+        """Emit one flight-recorder event stamped with this round/node
+        (call sites guard on ``self.recorder is not None``)."""
+        self.recorder.emit(
+            kind, round=self.rounds_run, node=self.node_name,
+            tenant=name, slot=getattr(st, "_slot", -1), **kw)
 
     # ---- forecast history + proactive/hybrid scaling --------------------
     def _record_history(self) -> None:
@@ -492,12 +532,17 @@ class DyverseController:
         else:
             fallback = np.zeros(n, bool)
         report.forecast_s += time.perf_counter() - t0
+        acc = self._phase_acc
+        if acc is not None:
+            _c0 = time.perf_counter()
         pos = {name: j for j, name in enumerate(names)}
         fall_l = fallback.tolist()
         req_hat = frame.requests.tolist()
         vr_hat = frame.vr.tolist()
         aL_hat = frame.avg_latency.tolist()
         order = sorted(reg, key=lambda nm: reg[nm].priority, reverse=True)
+        if acc is not None:
+            acc["classification"] += time.perf_counter() - _c0
         for name in order:
             if name not in reg:                 # evicted earlier this round
                 continue
@@ -566,6 +611,9 @@ class DyverseController:
         reg = self.registry
         if not reg:
             return
+        acc = self._phase_acc
+        if acc is not None:
+            _c0 = time.perf_counter()
         names, idx = self._dense_index()
         n = len(names)
         c = self._cols
@@ -603,6 +651,8 @@ class DyverseController:
         # insertion order, as sorted(reverse=True) does)
         order_l = np.argsort(-pri, kind="stable").tolist()
         pri_l = pri.tolist()
+        if acc is not None:
+            acc["classification"] += time.perf_counter() - _c0
         # probed per round, not cached: network_ok is a public attribute
         # and may be (re)assigned after construction
         check_net = self.network_ok is not _network_always_ok
@@ -710,6 +760,9 @@ class DyverseController:
             return
         freed_for: str | None = None
         my_pri = self._round_pri[k]
+        acc = self._phase_acc
+        if acc is not None:
+            _e0 = time.perf_counter()
         while self.pool.free_units < want:
             j = self._next_victim(k)
             # paper Procedure 2 line 10: stop at "index of s" — only tenants
@@ -719,13 +772,23 @@ class DyverseController:
             victim = self._round_names[j]
             self._terminate(victim, report, reason=f"evicted for {name}")
             freed_for = victim
+        if acc is not None:
+            acc["eviction"] += time.perf_counter() - _e0
         grant = min(want, self.pool.free_units)
         if grant > 0:
             st.quota = self.pool.grow(name, grant)
             cols, slot = self._cols, st._slot
             cols.scale[slot] += 1            # Scale_s penalty accounting
             cols.units[slot] = r_units + grant
-            self.actuator.apply_quota(name, st.quota)
+            if acc is None:
+                self.actuator.apply_quota(name, st.quota)
+            else:
+                _a0 = time.perf_counter()
+                self.actuator.apply_quota(name, st.quota)
+                acc["actuation"] += time.perf_counter() - _a0
+        if self.recorder is not None:
+            self._emit("scale_up", name, st, cause="reactive",
+                       want=want, granted=grant, freed_for=freed_for)
         report.actions.append(RoundAction(name, Decision.SCALE_UP, grant,
                                           my_pri, terminated_for=freed_for))
 
@@ -741,7 +804,16 @@ class DyverseController:
         else:
             cols.scale[slot] += 1            # Scale_s penalty accounting
         cols.units[slot] = units - 1
-        self.actuator.apply_quota(name, st.quota)
+        acc = self._phase_acc
+        if acc is None:
+            self.actuator.apply_quota(name, st.quota)
+        else:
+            _a0 = time.perf_counter()
+            self.actuator.apply_quota(name, st.quota)
+            acc["actuation"] += time.perf_counter() - _a0
+        if self.recorder is not None:
+            self._emit("donation" if donated else "scale_down", name, st,
+                       units=1)
         report.actions.append(RoundAction(name, Decision.SCALE_DOWN, 1,
                                           priority))
 
@@ -749,8 +821,16 @@ class DyverseController:
     def _scaling_round_reference(self, metrics, report: RoundReport) -> None:
         """The original per-tenant dict/dataclass loop, retained verbatim
         as the bitwise reference for the array path."""
+        acc = self._phase_acc
+        if acc is not None:
+            _c0 = time.perf_counter()
         order = sorted(self.registry, key=lambda n: self.registry[n].priority,
                        reverse=True)
+        if acc is not None:
+            # the reference loop interleaves per-tenant classification
+            # with actuation; the classification timer covers the
+            # priority-order sort (the array plane's analogue)
+            acc["classification"] += time.perf_counter() - _c0
         for name in order:
             if name not in self.registry:       # evicted earlier this round
                 continue
@@ -792,6 +872,9 @@ class DyverseController:
                                               st.priority))
             return
         freed_for: str | None = None
+        acc = self._phase_acc
+        if acc is not None:
+            _e0 = time.perf_counter()
         while evict and self.pool.free_units < want:
             victim = self._lowest_priority_victim(exclude=name)
             # paper Procedure 2 line 10: stop at "index of s" — only tenants
@@ -801,13 +884,24 @@ class DyverseController:
                 break
             self._terminate(victim, report, reason=f"evicted for {name}")
             freed_for = victim
+        if acc is not None:
+            acc["eviction"] += time.perf_counter() - _e0
         grant = min(want, self.pool.free_units)
         if grant > 0:
             self.pool.grow(name, grant)
             st.quota = self.pool.quota(name)
             st.scale_count += 1              # Scale_s penalty accounting
             self._sync_units_col(name, st)
-            self.actuator.apply_quota(name, st.quota)
+            if acc is None:
+                self.actuator.apply_quota(name, st.quota)
+            else:
+                _a0 = time.perf_counter()
+                self.actuator.apply_quota(name, st.quota)
+                acc["actuation"] += time.perf_counter() - _a0
+        if self.recorder is not None:
+            self._emit("scale_up", name, st,
+                       cause="reactive" if evict else "proactive",
+                       want=want, granted=grant, freed_for=freed_for)
         report.actions.append(RoundAction(name, Decision.SCALE_UP, grant,
                                           st.priority, terminated_for=freed_for))
 
@@ -827,7 +921,16 @@ class DyverseController:
         else:
             st.scale_count += 1              # Scale_s penalty accounting
         self._sync_units_col(name, st)
-        self.actuator.apply_quota(name, st.quota)
+        acc = self._phase_acc
+        if acc is None:
+            self.actuator.apply_quota(name, st.quota)
+        else:
+            _a0 = time.perf_counter()
+            self.actuator.apply_quota(name, st.quota)
+            acc["actuation"] += time.perf_counter() - _a0
+        if self.recorder is not None:
+            self._emit("donation" if donated else "scale_down", name, st,
+                       units=1)
         report.actions.append(RoundAction(name, Decision.SCALE_DOWN, 1,
                                           st.priority))
 
@@ -840,7 +943,16 @@ class DyverseController:
 
     def _terminate(self, name: str, report: RoundReport, reason: str) -> None:
         """Procedure 3: migrate users/state to the Cloud, destroy tenant."""
-        self.actuator.terminate(name)        # engine flushes KV, redirects users
+        acc = self._phase_acc
+        if acc is None:
+            self.actuator.terminate(name)    # engine flushes KV, redirects users
+        else:
+            _a0 = time.perf_counter()
+            self.actuator.terminate(name)
+            acc["actuation"] += time.perf_counter() - _a0
+        if self.recorder is not None:
+            self._emit("terminate", name, self.registry.get(name),
+                       cause=reason)
         self.pool.release(name)
         st = self.registry.pop(name, None)
         self._members_epoch += 1

@@ -123,3 +123,7 @@ class RoundReport:
     forecast_s: float = 0.0             # overhead: forecast prediction
     #                                     (proactive/hybrid scaling only)
     terminated: list[str] = field(default_factory=list)
+    # full round-pipeline walls (forecast/priority/classification/
+    # eviction/actuation/scaling), populated only while a
+    # repro.obs.FlightRecorder observes the run; None when tracing is off
+    phases: dict[str, float] | None = None

@@ -44,6 +44,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import TenantSpec
+from repro.obs.metrics import percentile_bands
 from repro.serving.request import Phase
 from repro.serving.spec import (ServingClassSpec, ServingSpec,  # noqa: F401
                                 VirtualClock)
@@ -206,6 +207,14 @@ class ServingFederation:
         for node in self.nodes:
             node.engine.evict_hook = \
                 lambda tenant, rts, n=node: self._on_evict(n, tenant, rts)
+        # optional flight recorder (repro.obs). MultiTenantEngine builds
+        # its controller internally, so instrument each one post-hoc;
+        # None = tracing off (hot paths pay one ``is None`` predicate)
+        self.obs = cfg.recorder
+        if self.obs is not None:
+            for node in self.nodes:
+                node.ctrl.recorder = self.obs
+                node.ctrl.node_name = node.name
         self.placements: list[PlacementEvent] = []
         self.replaced: list[str] = []
         self.failed: set[str] = set()
@@ -385,6 +394,9 @@ class ServingFederation:
             self.placements.append(PlacementEvent(
                 t=round(t), tenant=wl.name, node=node.name, kind=kind,
                 source=source))
+            if self.obs is not None:
+                self.obs.emit("placement", t=float(t), node=node.name,
+                              tenant=wl.name, cause=kind, source=source)
             if source is not None:
                 self.replaced.append(wl.name)
             return node
@@ -400,6 +412,9 @@ class ServingFederation:
         self.placements.append(PlacementEvent(
             t=round(t), tenant=wl.name, node=None, kind="cloud",
             source=source))
+        if self.obs is not None:
+            self.obs.emit("placement", t=float(t), tenant=wl.name,
+                          cause="cloud", source=source, host=host.name)
         return None
 
     # ---------------------------------------------------------- migration
@@ -407,6 +422,9 @@ class ServingFederation:
         """``MultiTenantEngine.evict_hook``: claim a Procedure-3 victim's
         live queue so the federation can migrate it (sibling first,
         Cloud second) instead of the engine's default Cloud path."""
+        if self.obs is not None:
+            self.obs.emit("serving_preempt", node=node.name, tenant=tenant,
+                          n=len(rts))
         self._pending_migrations.append((node, tenant, rts))
         return True
 
@@ -417,6 +435,9 @@ class ServingFederation:
         round-trip and the Cloud service latency."""
         slo = self.slo[tenant]
         extra = host.cfg.wan_extra_latency + self.cloud_latency_s
+        if self.obs is not None:
+            self.obs.emit("serving_cloud", t=float(now), node=host.name,
+                          tenant=tenant, n=len(rts))
         for rs in rts:
             rs.finish_t = now + extra
             host.record_cloud(tenant, rs.finish_t - rs.req.arrival_t, slo)
@@ -464,6 +485,9 @@ class ServingFederation:
         self.failed.add(node.name)
         self._ever_failed.add(node.name)
         eng = node.engine
+        if self.obs is not None:
+            self.obs.emit("node_fail", t=float(t), node=node.name,
+                          tenants=len(eng.ctrl.registry))
         refugees = []
         for name in list(eng.ctrl.registry):
             age = node.ctrl.prior_age(name)
@@ -525,6 +549,7 @@ class ServingFederation:
         recovery drain, then degradation restores/starts (the
         contraction cascade's evicted queues migrate immediately), then
         WAN clears/starts."""
+        obs = self.obs
         recovered: list[str] = []
         for _, rnames in self._due(self._pending_recoveries, t1):
             for rname in rnames:
@@ -532,6 +557,8 @@ class ServingFederation:
                     self.failed.discard(rname)
                     recovered.append(rname)
                     self.recovered.append(rname)
+                    if obs is not None:
+                        obs.emit("node_recover", t=float(t1), node=rname)
 
         due: list[str] = []
         while self._pending_failures and self._pending_failures[0][0] <= t1:
@@ -553,6 +580,9 @@ class ServingFederation:
                 if dname not in self.failed:
                     self._node(dname).ctrl.resize_capacity(
                         self._base_units[dname])
+                    if obs is not None:
+                        obs.emit("node_restore", t=float(t1), node=dname,
+                                 units=self._base_units[dname])
         degraded = False
         for _, dnames, frac in self._due(self._pending_deg_starts, t1):
             for dname in dnames:
@@ -562,6 +592,9 @@ class ServingFederation:
                 units = max(1, int(self._base_units[dname] * frac))
                 node.ctrl.resize_capacity(units)
                 degraded = True
+                if obs is not None:
+                    obs.emit("node_degrade", t=float(t1), node=dname,
+                             units=units)
         if degraded:
             # the cascade's victims handed their live queues to
             # evict_hook — migrate them now, at the same boundary
@@ -572,11 +605,17 @@ class ServingFederation:
                 self._wan_extra[wname] -= extra
                 self._node(wname).cfg.wan_extra_latency = \
                     self._base_wan[wname] + self._wan_extra[wname]
+                if obs is not None:
+                    obs.emit("wan_fault", t=float(t1), node=wname,
+                             cause="end", extra_s=extra)
         for _, wnames, extra in self._due(self._pending_wan_starts, t1):
             for wname in wnames:
                 self._wan_extra[wname] += extra
                 self._node(wname).cfg.wan_extra_latency = \
                     self._base_wan[wname] + self._wan_extra[wname]
+                if obs is not None:
+                    obs.emit("wan_fault", t=float(t1), node=wname,
+                             cause="start", extra_s=extra)
 
     # ---------------------------------------------------------- resilience
     def _apply_timeouts(self, now: float) -> None:
@@ -618,8 +657,16 @@ class ServingFederation:
                         rs.not_before = now + backoff
                         rs.timeout_t = rs.not_before + spec.timeout_s
                         tq.waiting.append(rs)
+                        if self.obs is not None:
+                            self.obs.emit("serving_retry", t=float(now),
+                                          node=node.name, tenant=name,
+                                          retries=rs.retries)
                     else:                # retry budget spent → Cloud
                         rs.phase = Phase.EVICTED
+                        if self.obs is not None:
+                            self.obs.emit("serving_timeout", t=float(now),
+                                          node=node.name, tenant=name,
+                                          cause="retry_budget")
                         self._cloud_flush(node, name, [rs], now)
 
     def _shed_excess(self, now: float) -> None:
@@ -648,6 +695,9 @@ class ServingFederation:
                        + self.cloud_latency_s)
                 rs.finish_t = rs.req.arrival_t + lat
                 node.record_shed(victim, lat, slo)
+                if self.obs is not None:
+                    self.obs.emit("serving_shed", t=float(now),
+                                  node=node.name, tenant=victim)
                 total -= 1
 
     # ---------------------------------------------------------- execution
@@ -656,6 +706,7 @@ class ServingFederation:
         Cloud-tier tenants draw from the SAME stream (their requests are
         serviced by the origin over the WAN), so a tenant's workload is
         independent of where it happens to be hosted."""
+        obs = self.obs
         for wl in self.fleet:
             name = wl.name
             c = self.cls[name]
@@ -673,20 +724,29 @@ class ServingFederation:
                     if self.spec.timeout_s is not None:
                         rs.timeout_t = (rs.req.arrival_t
                                         + self.spec.timeout_s)
+                    if obs is not None:
+                        obs.emit("serving_admit", node=node.name,
+                                 tenant=name)
                 else:
                     host = self._live_host(self.cloud_tenants.get(name))
                     host.record_cloud(
                         name, host.cfg.wan_extra_latency
                         + self.cloud_latency_s, self.slo[name])
+                    if obs is not None:
+                        obs.emit("serving_admit", tenant=name,
+                                 cause="cloud", host=host.name)
 
     def _live_nodes(self) -> list[ServingNode]:
         return [n for n in self.nodes if n.name not in self.failed]
 
     def run(self) -> ServingFederationResult:
         spec, cfg = self.spec, self.cfg
+        obs = self.obs
         for r in range(spec.rounds):
             for _ in range(spec.steps_per_round):
                 self.clock.tick()
+                if obs is not None:
+                    obs.now = self.clock()
                 self._submit_arrivals()
                 self._shed_excess(self.clock())
                 for node in self._live_nodes():
@@ -698,7 +758,18 @@ class ServingFederation:
                 # never land on a sibling whose round at this boundary
                 # hasn't run yet (same ordering as the sim federation)
                 for node in self._live_nodes():
-                    node.reports.append(node.ctrl.run_round())
+                    if obs is None:
+                        node.reports.append(node.ctrl.run_round())
+                    else:
+                        obs.now = float(t1)
+                        report = node.ctrl.run_round()
+                        node.reports.append(report)
+                        phases = dict(report.phases or {})
+                        for k, v in phases.items():
+                            obs.observe_phase(k, v)
+                        obs.emit("round", t=float(t1), node=node.name,
+                                 round=r, cause=cfg.policy,
+                                 dur=float(spec.round_virtual_s), **phases)
                 self._migrate_pending(t1)
             self._apply_faults(t1)
         # let in-flight requests finish (no new arrivals, no rounds)
@@ -709,6 +780,8 @@ class ServingFederation:
                        for tq in n.engine.sched.tenants.values()):
                 break
             self.clock.tick()
+            if obs is not None:
+                obs.now = self.clock()
             for node in live:
                 node.engine.step()
             self._apply_timeouts(self.clock())
@@ -754,12 +827,8 @@ class ServingFederation:
                     self.cls[rs.req.tenant].prefix, []).append(rs.latency())
             for tname, ls in n.lat_by_tenant.items():
                 by_class.setdefault(self.cls[tname].prefix, []).extend(ls)
-        token_bands = {
-            p: {"p50": float(np.percentile(a, 50)),
-                "p95": float(np.percentile(a, 95)),
-                "p99": float(np.percentile(a, 99)),
-                "n": float(len(a))}
-            for p, a in sorted(by_class.items()) if a}
+        token_bands = {p: percentile_bands(a)
+                       for p, a in sorted(by_class.items()) if a}
         return ServingFederationResult(
             policy=self.cfg.policy,
             node_results=node_results,
@@ -779,4 +848,5 @@ class ServingFederation:
             submitted=self._submitted,
             requests_conserved=True,
             token_latency_bands=token_bands,
+            events=(list(self.obs.events) if self.obs is not None else []),
         )

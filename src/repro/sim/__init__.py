@@ -60,6 +60,44 @@ fault draws new randomness); the serving federation additionally
 offers per-request timeouts with capped-backoff retries and graceful
 load shedding (:class:`repro.serving.spec.ServingSpec` knobs, all off
 by default).
+
+Observability (``repro.obs``)
+=============================
+
+``Scenario(trace=True)`` (or ``SimConfig.recorder`` /
+``FederationConfig.recorder`` directly) attaches a
+:class:`repro.obs.FlightRecorder` — a bounded ring of typed structured
+events stamped with the virtual clock, round index, node, tenant and
+cause. Tracing is strictly observational: it draws no RNG and perturbs
+no control decision, so every bitwise pin above holds with tracing on;
+with tracing off the hot loops pay one ``is None`` predicate.
+
+Event vocabulary (pinned by tests/test_obs.py): ``placement``,
+``scale_up`` / ``scale_down`` / ``donation`` / ``terminate``
+(Procedures 1–3), ``node_fail`` / ``node_recover`` / ``node_degrade``
+/ ``node_restore`` / ``wan_fault`` (fault model), ``serving_admit`` /
+``serving_preempt`` / ``serving_retry`` / ``serving_timeout`` /
+``serving_shed`` / ``serving_cloud`` (serving control loop), and the
+``round`` / ``chunk`` spans. Traced runs also profile the FULL round
+pipeline per round — monitor_feed / forecast / priority /
+classification / eviction / actuation / scaling — in
+``SimResult.overhead_phases`` (extending the three coarse overhead
+lists).
+
+Exporters: ``result.write_events_jsonl(path)`` (one JSON per line) and
+``result.write_trace(path)`` on ``SimResult`` / ``FederationResult`` /
+``ScenarioResult`` — the latter writes Chrome-trace JSON (rounds and
+chunks as slices, everything else as instants, one track per node,
+one process group per policy key); load it at https://ui.perfetto.dev
+or ``chrome://tracing``. ``examples/federation_demo.py --trace
+out.json`` is the one-liner; the campaign harness traces every cell
+under ``--artifacts DIR`` and keeps ``trace.json`` for failed or
+diverged cells.
+
+``benchmarks/run.py --only overhead`` reproduces the paper's
+overhead-vs-number-of-Edge-servers curve (1→32 simulated servers on
+one node; BENCH_overhead.json) from these per-phase walls and asserts
+the sub-second-per-server analogue.
 """
 from repro.sim.workload import (FleetBatch, GameWorkload,  # noqa: F401
                                 StreamWorkload, Workload, make_game_fleet,

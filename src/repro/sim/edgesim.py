@@ -42,6 +42,7 @@ measurements of Fig. 2 (controller wall-clock per round).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -94,6 +95,10 @@ class SimConfig:
     wan_extra_latency: float = WAN_EXTRA_LATENCY
     unit_price: float = 1.0           # per-uR price (price-aware placement)
     seed: int = 0
+    # optional repro.obs.FlightRecorder shared by node + controller +
+    # engine. None (default) = tracing off: the hot paths reduce to one
+    # ``is None`` predicate and the run is bitwise-identical either way
+    recorder: object | None = None
 
     def __post_init__(self):
         if self.jit_scale:
@@ -133,12 +138,25 @@ class SimResult:
     migration_s: list[float] = field(default_factory=list)
     total_requests: int = 0                     # Edge-serviced (Eq. 1 basis)
     total_violations: int = 0
+    # tracing-on extras (empty when the run had no FlightRecorder):
+    # phase name → per-round walls for the full round pipeline
+    # (monitor_feed / forecast / priority / classification / eviction /
+    # actuation / scaling), and the node's flight-recorder events
+    overhead_phases: dict[str, list[float]] = field(default_factory=dict)
+    events: list = field(default_factory=list)
 
     @property
     def mean_overhead_per_server_s(self) -> float:
+        """Mean per-round management overhead (the paper's Fig. 2
+        per-server claim). The divisor is the number of rounds actually
+        recorded across all three overhead lists — they can differ in
+        length on early-terminated/partial runs, and dividing the
+        three-list total by only ``len(priority)`` inflated the mean."""
         tot = (sum(self.overhead_priority_s) + sum(self.overhead_scaling_s)
                + sum(self.overhead_forecast_s))
-        n = max(len(self.overhead_priority_s), 1)
+        n = max(len(self.overhead_priority_s),
+                len(self.overhead_scaling_s),
+                len(self.overhead_forecast_s), 1)
         return tot / n
 
     def band_fractions(self, lo: float, hi: float) -> float:
@@ -146,6 +164,19 @@ class SimResult:
         lat, slo = self.latencies, self.slos
         sel = (lat >= lo * slo) & (lat < hi * slo)
         return float(sel.mean()) if lat.size else 0.0
+
+    # -------------------------------------------------- obs exporters
+    def write_events_jsonl(self, path: str) -> str:
+        """Dump this node's flight-recorder events as JSONL (tracing-on
+        runs only; off runs write an empty file)."""
+        from repro.obs import write_events_jsonl
+        return write_events_jsonl(path, self.events)
+
+    def write_trace(self, path: str) -> str:
+        """Write a Chrome-trace/Perfetto ``trace.json`` of this run
+        (open at https://ui.perfetto.dev)."""
+        from repro.obs import write_chrome_trace
+        return write_chrome_trace(path, {self.policy: self.events})
 
 
 class _SimActuator:
@@ -194,6 +225,10 @@ class EdgeNodeSim:
         self._stepper: FleetStepper | None = None
         self.evicted: set[str] = set()
         self.migration_s: list[float] = []
+        # optional flight recorder (repro.obs); _feed_wall accumulates
+        # the monitor-feed wall between rounds while tracing is on
+        self._obs = cfg.recorder
+        self._feed_wall = 0.0
         self.ctrl = DyverseController(
             capacity=NodeCapacity(slots=cfg.capacity_units,
                                   pages=cfg.capacity_units * 8),
@@ -207,6 +242,8 @@ class EdgeNodeSim:
             forecaster=cfg.forecaster,
             forecast_window=cfg.forecast_window,
             hybrid_vr_band=cfg.hybrid_vr_band,
+            recorder=cfg.recorder,
+            node_name=name,
         )
         # run-state accumulators (chunk API)
         self._result = SimResult(policy=cfg.policy, violation_rate=0.0)
@@ -297,7 +334,15 @@ class EdgeNodeSim:
         controller decisions — is bitwise equal. The jax engine matches
         them statistically, not bitwise (see
         :mod:`repro.sim.engines.jax_backend`)."""
+        obs = self._obs
+        if obs is None:
+            self.backend.step_node(self, t0, t1)
+            return
+        w0 = time.perf_counter()
         self.backend.step_node(self, t0, t1)
+        obs.now = float(t1)
+        obs.emit("chunk", t=float(t1), node=self.name,
+                 dur=float(t1 - t0), wall=time.perf_counter() - w0)
 
     def _tenant_units(self, name: str) -> int:
         if name in self.evicted:
@@ -315,10 +360,19 @@ class EdgeNodeSim:
                 self._all_lat.append(lat + self.cfg.wan_extra_latency)
                 self._all_slo.append(np.full(lat.size, slo))
             return
-        self.ctrl.monitor.record_batch(
-            name, lat, slo,
-            data_mb=float(counts.sum()) * wl.data_per_request_mb)
-        self.ctrl.monitor.set_users(name, wl.users())
+        if self._obs is None:
+            self.ctrl.monitor.record_batch(
+                name, lat, slo,
+                data_mb=float(counts.sum()) * wl.data_per_request_mb)
+            self.ctrl.monitor.set_users(name, wl.users())
+        else:
+            # identical calls, wall-clocked into the monitor-feed phase
+            f0 = time.perf_counter()
+            self.ctrl.monitor.record_batch(
+                name, lat, slo,
+                data_mb=float(counts.sum()) * wl.data_per_request_mb)
+            self.ctrl.monitor.set_users(name, wl.users())
+            self._feed_wall += time.perf_counter() - f0
         if lat.size:
             self._all_lat.append(lat)
             self._all_slo.append(np.full(lat.size, slo))
@@ -371,14 +425,31 @@ class EdgeNodeSim:
             lat = np.concatenate(parts) if parts else np.empty(0)
             self._account_chunk(name, wl, lat, counts, slo)
 
-    def run_controller_round(self):
-        """One Procedure-1 round; records overheads and terminations."""
+    def run_controller_round(self, t: int | None = None):
+        """One Procedure-1 round; records overheads and terminations.
+        ``t`` (the round-boundary virtual time) stamps the recorder's
+        clock cursor and the round span when tracing is on."""
+        obs = self._obs
+        if obs is not None and t is not None:
+            obs.now = float(t)
         report = self.ctrl.run_round()
-        self._result.overhead_priority_s.append(report.priority_update_s)
-        self._result.overhead_scaling_s.append(report.scaling_s)
-        self._result.overhead_forecast_s.append(report.forecast_s)
-        self._result.terminated.extend(report.terminated)
-        self._result.round_actions.append(report.actions)
+        res = self._result
+        res.overhead_priority_s.append(report.priority_update_s)
+        res.overhead_scaling_s.append(report.scaling_s)
+        res.overhead_forecast_s.append(report.forecast_s)
+        res.terminated.extend(report.terminated)
+        res.round_actions.append(report.actions)
+        if obs is not None:
+            ri = len(res.overhead_priority_s) - 1
+            phases = dict(report.phases or {})
+            phases["monitor_feed"] = self._feed_wall
+            self._feed_wall = 0.0
+            for k, v in phases.items():
+                res.overhead_phases.setdefault(k, []).append(v)
+                obs.observe_phase(k, v)
+            obs.emit("round", node=self.name, round=ri,
+                     cause=self.cfg.policy,
+                     dur=float(self.cfg.round_interval), **phases)
         return report
 
     def finalize(self) -> SimResult:
@@ -400,6 +471,12 @@ class EdgeNodeSim:
         res.slos = (np.concatenate(self._all_slo)
                     if self._all_slo else np.empty(0))
         res.migration_s = self.migration_s
+        if self._obs is not None:
+            # standalone runs own their recorder; federations attach the
+            # shared event stream to the FederationResult instead and
+            # filter per-node here
+            res.events = [e for e in self._obs.events
+                          if e.node in (self.name, None)]
         return res
 
     # ------------------------------------------------------------ standalone
@@ -411,7 +488,7 @@ class EdgeNodeSim:
             self.step_chunk(t, t1)
             if cfg.policy != "none" and t1 % cfg.round_interval == 0 \
                     and t1 < cfg.duration_s:
-                self.run_controller_round()
+                self.run_controller_round(t1)
             t = t1
         return self.finalize()
 
@@ -486,6 +563,10 @@ class FleetStepper:
     def __init__(self, nodes: list[EdgeNodeSim]):
         self.nodes = nodes
         self._epochs: tuple | None = None
+        # federation runs share one recorder across all nodes, so any
+        # node's reference is THE recorder (None = tracing off)
+        self._obs = next((n._obs for n in nodes if n._obs is not None),
+                         None)
         self._use_jax = any(n.cfg.backend_options.get("jit_scale", False)
                             for n in nodes)
         # overlap needs spare cores: workers beyond cores−1 just fight
@@ -598,6 +679,17 @@ class FleetStepper:
                 for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo]
 
     def step(self, t0: int, t1: int) -> None:
+        obs = self._obs
+        if obs is not None:
+            w0 = time.perf_counter()
+            self._step(t0, t1)
+            obs.now = float(t1)
+            obs.emit("chunk", t=float(t1), dur=float(t1 - t0),
+                     wall=time.perf_counter() - w0)
+            return
+        self._step(t0, t1)
+
+    def _step(self, t0: int, t1: int) -> None:
         epochs = tuple(n._fleet_epoch for n in self.nodes)
         if epochs != self._epochs:
             self._rebuild()
@@ -713,9 +805,11 @@ class FleetStepper:
         totals_l = totals.tolist()
         viol_l = viol_t.tolist()
         all_live = bool(live.all())
+        obs_on = self._obs is not None
         for ni, (node, sl) in enumerate(zip(self.nodes, self._node_slices)):
             if sl.stop == sl.start:
                 continue
+            f0 = time.perf_counter() if obs_on else 0.0
             if all_live and self._node_array_feed[ni]:
                 # no evicted rows → the node's rows are one contiguous
                 # slice: feed views instead of six gather copies
@@ -725,24 +819,28 @@ class FleetStepper:
                 node.ctrl.monitor.add_chunk(
                     self._slot_ids[sl], totals[sl], lat_sums[sl],
                     viol_t[sl], totals[sl] * self._data_mb_arr[sl], users)
-                continue
-            rows = np.flatnonzero(live[sl]) + sl.start
-            if rows.size == 0:
-                continue
-            mon = node.ctrl.monitor
-            rows_l = rows.tolist()
-            if self._node_array_feed[ni]:
-                users = (users_arr[rows] if users_arr is not None
-                         else np.array([entries[i][2].users()
-                                        for i in rows_l], np.int64))
-                mon.add_chunk(self._slot_ids[rows], totals[rows],
-                              lat_sums[rows], viol_t[rows],
-                              totals[rows] * self._data_mb_arr[rows], users)
             else:
-                for i in rows_l:
-                    _, name, wl = entries[i]
-                    mon.record_batch_sums(
-                        name, totals_l[i], float(lat_sums[i]), viol_l[i],
-                        totals_l[i] * self._data_mb[i],
-                        users=(int(users_arr[i]) if users_arr is not None
-                               else wl.users()))
+                rows = np.flatnonzero(live[sl]) + sl.start
+                if rows.size == 0:
+                    continue
+                mon = node.ctrl.monitor
+                rows_l = rows.tolist()
+                if self._node_array_feed[ni]:
+                    users = (users_arr[rows] if users_arr is not None
+                             else np.array([entries[i][2].users()
+                                            for i in rows_l], np.int64))
+                    mon.add_chunk(self._slot_ids[rows], totals[rows],
+                                  lat_sums[rows], viol_t[rows],
+                                  totals[rows] * self._data_mb_arr[rows],
+                                  users)
+                else:
+                    for i in rows_l:
+                        _, name, wl = entries[i]
+                        mon.record_batch_sums(
+                            name, totals_l[i], float(lat_sums[i]),
+                            viol_l[i], totals_l[i] * self._data_mb[i],
+                            users=(int(users_arr[i])
+                                   if users_arr is not None
+                                   else wl.users()))
+            if obs_on:
+                node._feed_wall += time.perf_counter() - f0

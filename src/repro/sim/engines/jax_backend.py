@@ -358,7 +358,9 @@ class JaxFleetStepper(FleetStepper):
             jnp.asarray(demand, _F32), jnp.asarray(capacity, _F32)))
 
     # ---------------------------------------------------------- step
-    def step(self, t0: int, t1: int) -> None:
+    # (the public step() lives on FleetStepper: it wraps this body with
+    # the optional flight-recorder chunk span and clock-cursor update)
+    def _step(self, t0: int, t1: int) -> None:
         epochs = tuple(n._fleet_epoch for n in self.nodes)
         if epochs != self._epochs:
             self._rebuild()

@@ -189,6 +189,9 @@ class FederationConfig:
     # the node↔Cloud link over the window, at chunk boundaries
     wan_faults: list[tuple] = field(default_factory=list)
     seed: int = 0
+    # optional repro.obs.FlightRecorder shared by the federation and
+    # every node/controller/engine; None (default) = tracing off
+    recorder: object | None = None
 
     def _per_node(self, values, i: int, default):
         if values is None:
@@ -223,6 +226,7 @@ class FederationConfig:
                                              WAN_EXTRA_LATENCY),
             unit_price=self._per_node(self.node_unit_price, i, 1.0),
             seed=self.seed,
+            recorder=self.recorder,
         )
 
 
@@ -249,6 +253,9 @@ class FederationResult:
     cloud: list[str] = field(default_factory=list)      # ended on the Cloud
     failed_nodes: list[str] = field(default_factory=list)   # ever failed
     recovered_nodes: list[str] = field(default_factory=list)  # rejoined
+    # flight-recorder event stream (tracing-on runs only): the shared
+    # recorder's whole ring, federation- and node-level events merged
+    events: list = field(default_factory=list)
 
     @property
     def per_node_vr(self) -> dict[str, float]:
@@ -259,10 +266,25 @@ class FederationResult:
         return {n: r.mean_overhead_per_server_s
                 for n, r in self.node_results.items()}
 
+    # -------------------------------------------------- obs exporters
+    def write_events_jsonl(self, path: str) -> str:
+        """JSONL dump of the run's flight-recorder events (tracing-on
+        runs only; off runs write an empty file)."""
+        from repro.obs import write_events_jsonl
+        return write_events_jsonl(path, self.events)
+
+    def write_trace(self, path: str) -> str:
+        """Chrome-trace/Perfetto ``trace.json`` of this run: one track
+        per node plus a federation track (open at
+        https://ui.perfetto.dev)."""
+        from repro.obs import write_chrome_trace
+        return write_chrome_trace(path, {self.policy: self.events})
+
 
 class EdgeFederation:
     def __init__(self, workloads: list[Workload], cfg: FederationConfig):
         self.cfg = cfg
+        self.obs = cfg.recorder          # None = tracing off
         self.placement = resolve_placement(cfg.placement)
         self.nodes = [
             EdgeNodeSim([], cfg.node_sim_config(i), name=f"edge{i}")
@@ -446,6 +468,9 @@ class EdgeFederation:
             self.placements.append(PlacementEvent(
                 t=t, tenant=wl.name, node=node.name, kind=kind,
                 source=source))
+            if self.obs is not None:
+                self.obs.emit("placement", t=float(t), node=node.name,
+                              tenant=wl.name, cause=kind, source=source)
             if source is not None:
                 self.replaced.append(wl.name)
             return node
@@ -462,6 +487,9 @@ class EdgeFederation:
         host.host_cloud_tenant(wl, tenant_rng=tenant_rng)
         self.placements.append(PlacementEvent(
             t=t, tenant=wl.name, node=None, kind="cloud", source=source))
+        if self.obs is not None:
+            self.obs.emit("placement", t=float(t), tenant=wl.name,
+                          cause="cloud", source=source, host=host.name)
         return None
 
     def _replace_terminated(self, node: EdgeNodeSim, terminated: list[str],
@@ -497,6 +525,9 @@ class EdgeFederation:
         already-served requests still count in Eq. 1."""
         self.failed.add(node.name)       # idempotent under batched faults
         self._ever_failed.add(node.name)
+        if self.obs is not None:
+            self.obs.emit("node_fail", t=float(t), node=node.name,
+                          tenants=len(node.workloads))
         refugees = []
         for name in list(node.workloads):
             age = node.ctrl.prior_age(name)
@@ -571,6 +602,7 @@ class EdgeFederation:
         back onto the Edge, (4) degradation windows close then open
         (capacity restore before a new contraction cascade), (5) WAN
         spikes clear then start."""
+        obs = self.obs
         recovered: list[str] = []
         for _, rnames in self._due(self._pending_recoveries, t1):
             for rname in rnames:
@@ -578,6 +610,8 @@ class EdgeFederation:
                     self.failed.discard(rname)
                     recovered.append(rname)
                     self.recovered.append(rname)
+                    if obs is not None:
+                        obs.emit("node_recover", t=float(t1), node=rname)
 
         due: list[str] = []
         while self._pending_failures and self._pending_failures[0][0] <= t1:
@@ -600,6 +634,9 @@ class EdgeFederation:
                     # growing back to base capacity never evicts
                     self._node(dname).ctrl.resize_capacity(
                         self._base_units[dname])
+                    if obs is not None:
+                        obs.emit("node_restore", t=float(t1), node=dname,
+                                 units=self._base_units[dname])
         for _, dnames, frac in self._due(self._pending_deg_starts, t1):
             for dname in dnames:
                 if dname in self.failed:
@@ -607,6 +644,9 @@ class EdgeFederation:
                 node = self._node(dname)
                 units = max(1, int(self._base_units[dname] * frac))
                 terminated = node.ctrl.resize_capacity(units)
+                if obs is not None:
+                    obs.emit("node_degrade", t=float(t1), node=dname,
+                             units=units, terminated=len(terminated))
                 self._replace_terminated(node, terminated, t1)
 
         wan_dirty: set[str] = set()
@@ -614,10 +654,16 @@ class EdgeFederation:
             for wname in wnames:
                 self._wan_extra[wname] -= extra
                 wan_dirty.add(wname)
+                if obs is not None:
+                    obs.emit("wan_fault", t=float(t1), node=wname,
+                             cause="end", extra_s=extra)
         for _, wnames, extra in self._due(self._pending_wan_starts, t1):
             for wname in wnames:
                 self._wan_extra[wname] += extra
                 wan_dirty.add(wname)
+                if obs is not None:
+                    obs.emit("wan_fault", t=float(t1), node=wname,
+                             cause="start", extra_s=extra)
         for wname in sorted(wan_dirty):
             node = self._node(wname)
             node.cfg.wan_extra_latency = (self._base_wan[wname]
@@ -649,7 +695,7 @@ class EdgeFederation:
                 # this same boundary hasn't run yet (it would be scaled
                 # down / evictable with zero requests on the books, and
                 # outcomes would depend on node iteration order)
-                reports = [(n, n.run_controller_round())
+                reports = [(n, n.run_controller_round(t1))
                            for n in self.nodes if n.name not in self.failed]
                 for node, report in reports:
                     self._replace_terminated(node, report.terminated, t1)
@@ -675,4 +721,6 @@ class EdgeFederation:
             cloud=cloud,
             failed_nodes=sorted(self._ever_failed | self.failed),
             recovered_nodes=sorted(set(self.recovered)),
+            events=(list(self.obs.events) if self.obs is not None
+                    else []),
         )

@@ -378,6 +378,13 @@ class Scenario:
     # engine="serving" only: the real-engine shape (models, arrival
     # rates, virtual-clock cadence) the fleet is served with
     serving: ServingSpec | None = None
+    # when True, run_scenario attaches a fresh repro.obs.FlightRecorder
+    # to every (policy, scaling) run: events land on each
+    # FederationResult.events and ScenarioResult gains working
+    # write_trace()/write_events_jsonl() exporters. Tracing is
+    # observability-only — it draws no RNG and perturbs no control
+    # decision, so results are bitwise-identical either way.
+    trace: bool = False
 
     def validate(self) -> None:
         from repro.core.forecast import FORECASTERS, SCALING_POLICIES
@@ -525,6 +532,10 @@ class PolicyOutcome:
     # reported alongside the model-based band_fractions above; None on
     # simulator engines (their latencies come from the latency model)
     token_latency_bands: dict[str, dict[str, float]] | None = None
+    # the paper's headline metric: mean (priority + scaling + forecast)
+    # wall per round, averaged over the federation's Edge servers —
+    # uniform across the simulator engines AND engine="serving"
+    mean_overhead_per_server_s: float = 0.0
 
     def to_record(self) -> dict:
         """A flat, JSON-serializable summary row (the campaign harness
@@ -537,6 +548,7 @@ class PolicyOutcome:
             "band_fractions": dict(self.band_fractions),
             "max_round_overhead_s": self.max_round_overhead_s,
             "mean_round_overhead_s": dict(self.mean_round_overhead_s),
+            "mean_overhead_per_server_s": self.mean_overhead_per_server_s,
             "replaced": self.replaced,
             "cloud": self.cloud,
             "recovered": self.recovered,
@@ -570,6 +582,26 @@ class ScenarioResult:
         """The placement timeline (admissions, re-placements, failovers,
         Cloud fallbacks) of one policy's run."""
         return self.results[policy].placements
+
+    def events(self, key: str) -> list:
+        """One outcome's flight-recorder event stream (empty unless the
+        scenario ran with ``trace=True``)."""
+        return self.results[key].events
+
+    def write_events_jsonl(self, path) -> None:
+        """All traced outcomes' events as JSON Lines, one per line."""
+        from repro.obs import write_events_jsonl
+        write_events_jsonl(path, [e for res in self.results.values()
+                                  for e in res.events])
+
+    def write_trace(self, path) -> None:
+        """Export every traced outcome as a Chrome-trace/Perfetto
+        ``trace.json``: one process group per outcome key, one thread
+        track per node (load it at ui.perfetto.dev or chrome://tracing)."""
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(path, {k: res.events
+                                  for k, res in self.results.items()
+                                  if res.events})
 
     def to_records(self) -> list[dict]:
         """One flat summary row per swept outcome (key included) —
@@ -687,11 +719,16 @@ def run_scenario(scenario: Scenario | str, *,
                    else f"{policy}/{spol}")
             fleet = scenario.fleet.build()
             cfg = scenario.federation_config(policy, spol)
+            if scenario.trace:
+                from repro.obs import FlightRecorder
+                cfg.recorder = FlightRecorder()
             t0 = time.perf_counter()
             res = resolve_engine(scenario.engine).run_federation(
                 fleet, cfg, scenario)
             wall = time.perf_counter() - t0
             over = res.mean_round_overhead_s
+            per_server = [nr.mean_overhead_per_server_s
+                          for nr in res.node_results.values()]
             out.results[key] = res
             out.outcomes[key] = PolicyOutcome(
                 policy=policy,
@@ -710,6 +747,8 @@ def run_scenario(scenario: Scenario | str, *,
                 requests_conserved=getattr(res, "requests_conserved", None),
                 token_latency_bands=getattr(res, "token_latency_bands",
                                             None),
+                mean_overhead_per_server_s=(
+                    float(np.mean(per_server)) if per_server else 0.0),
             )
     return out
 

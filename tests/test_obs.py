@@ -1,0 +1,299 @@
+"""Flight-recorder observability layer (repro.obs).
+
+The load-bearing contract here is NEUTRALITY: tracing draws no RNG and
+perturbs no control decision, so a run with a recorder attached must be
+bitwise-identical to the same run without one — across every engine and
+both control planes, including the serving federation. The rest pins
+the ring semantics, the unified band math, the exporters (JSONL +
+Chrome-trace), the per-phase profile, the campaign trace artifacts, and
+the ``mean_overhead_per_server_s`` divisor fix.
+"""
+import dataclasses
+import hashlib
+import json
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.obs import (EVENT_KINDS, Event, FlightRecorder, Histogram,
+                       chrome_trace_events, percentile_bands,
+                       write_events_jsonl)
+from repro.sim import EdgeNodeSim, SimConfig
+from repro.sim.edgesim import SimResult
+from repro.sim.scenario import SCENARIOS, run_scenario
+from repro.sim.workload import make_game_fleet
+
+
+# ------------------------------------------------------------- primitives
+def test_event_kinds_pinned():
+    """The event vocabulary is an API: exporters, docs and the ROADMAP
+    events table all reference these names."""
+    assert EVENT_KINDS == frozenset({
+        "placement", "scale_up", "scale_down", "donation", "terminate",
+        "node_fail", "node_recover", "node_degrade", "node_restore",
+        "wan_fault",
+        "serving_admit", "serving_preempt", "serving_retry",
+        "serving_timeout", "serving_shed", "serving_cloud",
+        "round", "chunk",
+    })
+
+
+def test_recorder_ring_bounded():
+    rec = FlightRecorder(capacity=4)
+    for i in range(7):
+        rec.emit("placement", t=float(i), tenant=f"t{i}")
+    assert len(rec) == 4
+    assert rec.dropped == 3
+    # the ring keeps the NEWEST events
+    assert [e.t for e in rec.events_list()] == [3.0, 4.0, 5.0, 6.0]
+    # counters saw every emission, not just the survivors
+    assert rec.counts() == {"placement": 7}
+
+
+def test_emit_rejects_unknown_kind():
+    with pytest.raises(AssertionError, match="unknown event kind"):
+        FlightRecorder().emit("not_a_kind")
+
+
+def test_emit_inherits_clock_cursor():
+    rec = FlightRecorder()
+    rec.now = 42.5
+    rec.emit("scale_up", tenant="a")
+    rec.emit("scale_down", t=1.0, tenant="a")
+    assert [e.t for e in rec.events] == [42.5, 1.0]
+
+
+def test_percentile_bands_matches_serving_inline():
+    """percentile_bands is the band math lifted out of
+    serving.federation._finalize — it must reproduce the historical
+    inline computation bitwise."""
+    rng = np.random.default_rng(0)
+    a = list(rng.exponential(0.3, 137))
+    expected = {"p50": float(np.percentile(a, 50)),
+                "p95": float(np.percentile(a, 95)),
+                "p99": float(np.percentile(a, 99)),
+                "n": float(len(a))}
+    assert percentile_bands(a) == expected
+
+
+def test_histogram_bands():
+    h = Histogram("x")
+    assert h.bands() is None
+    h.extend([1.0, 2.0, 3.0])
+    assert h.count == 3 and h.sum == 6.0
+    assert h.bands()["p50"] == 2.0
+
+
+# --------------------------------------------------------- divisor fix
+def test_mean_overhead_divisor_uses_longest_list():
+    """Regression pin: the three overhead lists can differ in length
+    (e.g. forecast only under proactive scaling); the divisor is the
+    number of rounds actually recorded, not len(priority)."""
+    r = SimResult(policy="sdps", violation_rate=0.0,
+                  overhead_priority_s=[0.1, 0.1],
+                  overhead_scaling_s=[0.2, 0.2, 0.2],
+                  overhead_forecast_s=[])
+    assert r.mean_overhead_per_server_s == pytest.approx(0.8 / 3)
+    assert SimResult(policy="none",
+                     violation_rate=0.0).mean_overhead_per_server_s == 0.0
+
+
+# ---------------------------------------------------------- neutrality
+def _sim_digest(res) -> str:
+    h = hashlib.sha256()
+    h.update(np.asarray(res.latencies, np.float64).tobytes())
+    for acts in res.round_actions:
+        for a in acts:
+            h.update(repr((a.tenant, a.decision.name, a.units,
+                           a.priority, a.terminated_for)).encode())
+    h.update(repr(sorted(res.terminated)).encode())
+    return h.hexdigest()
+
+
+def _node_sim(engine: str, control_plane: str,
+              recorder: FlightRecorder | None) -> EdgeNodeSim:
+    cfg = SimConfig(policy="sdps", duration_s=240, round_interval=60,
+                    capacity_units=96, default_units=8, seed=3,
+                    engine=engine, control_plane=control_plane,
+                    recorder=recorder)
+    return EdgeNodeSim(make_game_fleet(8, np.random.default_rng(3)), cfg)
+
+
+@pytest.mark.parametrize("engine", ["scalar", "vectorized", "batched"])
+@pytest.mark.parametrize("control_plane", ["array", "reference"])
+def test_tracing_neutral_sim_engines(engine, control_plane):
+    """Recorder on == recorder off, bitwise, on every numpy engine and
+    both control planes (action stream, latencies, terminations)."""
+    off = _node_sim(engine, control_plane, None).run()
+    rec = FlightRecorder()
+    on = _node_sim(engine, control_plane, rec).run()
+    assert _sim_digest(off) == _sim_digest(on)
+    assert len(rec) > 0 and on.events
+    assert off.overhead_phases == {} and on.overhead_phases
+    # the full round pipeline is profiled, one wall per round
+    rounds = len(on.overhead_priority_s)
+    for phase in ("monitor_feed", "forecast", "priority",
+                  "classification", "eviction", "actuation", "scaling"):
+        assert len(on.overhead_phases[phase]) == rounds, phase
+
+
+def test_tracing_neutral_jax_engine():
+    """The jax backend inherits the chunk-span wrapper; its bitwise
+    repeat-run pin must hold with tracing on."""
+    sc = dataclasses.replace(SCENARIOS["mixed_fleet"], engine="jax")
+    off = run_scenario(sc, quick=True)
+    on = run_scenario(dataclasses.replace(sc, trace=True), quick=True)
+    for k in off.results:
+        for n in off.results[k].node_results:
+            assert np.array_equal(
+                off.results[k].node_results[n].latencies,
+                on.results[k].node_results[n].latencies), (k, n)
+    assert any(r.events for r in on.results.values())
+
+
+def test_tracing_neutral_serving_federation():
+    """engine="serving": real-engine token streams, placements and the
+    violation table are unchanged by the recorder."""
+    from test_serving_federation import _tiny_scenario
+    off = run_scenario(_tiny_scenario())
+    on = run_scenario(dataclasses.replace(_tiny_scenario(), trace=True))
+    for k in off.outcomes:
+        ra, rb = off.results[k], on.results[k]
+        assert ra.violation_rate == rb.violation_rate
+        assert (ra.tokens, ra.completed, ra.shed) == \
+            (rb.tokens, rb.completed, rb.shed)
+        for n in ra.node_results:
+            assert np.array_equal(ra.node_results[n].latencies,
+                                  rb.node_results[n].latencies)
+        assert rb.events, "serving run traced no events"
+        kinds = {e.kind for e in rb.events}
+        assert "serving_admit" in kinds
+
+
+def test_tracing_off_allocates_nothing_from_obs():
+    """The off path is one ``is None`` predicate: stepping chunks with
+    no recorder must allocate zero bytes from any repro/obs source."""
+    sim = _node_sim("vectorized", "array", None)
+    sim.step_chunk(0, 60)               # warm caches outside the trace
+    tracemalloc.start()
+    try:
+        for t in range(60, 240, 60):
+            sim.step_chunk(t, t + 60)
+            sim.run_controller_round(t + 60)
+        snap = tracemalloc.take_snapshot()
+    finally:
+        tracemalloc.stop()
+    obs_allocs = [s for s in snap.statistics("filename")
+                  if "repro/obs" in (s.traceback[0].filename or "")]
+    assert obs_allocs == []
+
+
+# ----------------------------------------------------------- exporters
+def _traced_scenario_result():
+    sc = dataclasses.replace(SCENARIOS["node_failure_midrun"],
+                             engine="vectorized", trace=True,
+                             policies=("none", "sdps"))
+    return run_scenario(sc, quick=True)
+
+
+def test_chrome_trace_is_valid(tmp_path):
+    res = _traced_scenario_result()
+    path = tmp_path / "trace.json"
+    res.write_trace(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and evs
+    assert {e["ph"] for e in evs} <= {"M", "X", "i"}
+    for e in evs:
+        assert {"ph", "pid", "tid", "name"} <= e.keys()
+        if e["ph"] == "X":              # spans carry ts + dur
+            assert e["dur"] >= 0.0 and "ts" in e
+        if e["ph"] == "i":
+            assert e["s"] == "t"
+    # one process group per swept policy key, named via metadata
+    pnames = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "process_name"}
+    assert pnames == {"none", "sdps"}
+    # per-node thread tracks exist
+    tnames = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert any(t.startswith("edge") for t in tnames)
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert {s["name"] for s in spans} <= {"round", "chunk"}
+    assert spans, "no round/chunk spans in the trace"
+
+
+def test_events_jsonl_roundtrip(tmp_path):
+    res = _traced_scenario_result()
+    path = tmp_path / "events.jsonl"
+    res.write_events_jsonl(str(path))
+    lines = path.read_text().splitlines()
+    assert len(lines) == sum(len(r.events) for r in res.results.values())
+    for line in lines:
+        d = json.loads(line)
+        assert d["kind"] in EVENT_KINDS
+
+
+def test_chrome_trace_span_window():
+    """A span's ts is its window START (t - dur), in microseconds."""
+    e = Event(kind="round", t=300.0, node="edge0", detail={"dur": 300.0})
+    (meta, span) = chrome_trace_events([e])
+    assert meta["ph"] == "M"
+    assert span["ts"] == 0.0 and span["dur"] == 300.0 * 1e6
+
+
+# --------------------------------------------- serving overhead surface
+def test_serving_cells_report_overhead_per_server():
+    """engine="serving" outcomes report mean_overhead_per_server_s like
+    the sim engines do (the round reports feed the same SimResult
+    lists), and the field reaches the campaign record."""
+    from test_serving_federation import _tiny_scenario
+    res = run_scenario(_tiny_scenario())
+    oc = res.outcomes["sdps"]
+    assert oc.mean_overhead_per_server_s > 0.0
+    rec = oc.to_record()
+    assert rec["mean_overhead_per_server_s"] == \
+        oc.mean_overhead_per_server_s
+
+
+# ------------------------------------------------- campaign artifacts
+def test_campaign_cell_writes_trace_artifact(tmp_path):
+    from repro.campaign import RunSpec, artifact_dir_for, run_cells
+    sc = dataclasses.replace(SCENARIOS["mixed_fleet"],
+                             policies=("sdps",))
+    cell = RunSpec(scenario=sc, engine="vectorized",
+                   control_plane="array", placement="least_loaded",
+                   policy="sdps", scaling_policy="reactive",
+                   forecaster="ewma", seed=7)
+    recs = run_cells([cell], quick=True, workers=0,
+                     artifacts_dir=str(tmp_path))
+    assert recs[0]["status"] == "ok"
+    trace_path = recs[0]["trace_path"]
+    assert trace_path.startswith(
+        artifact_dir_for(cell.cell_id, str(tmp_path)))
+    with open(trace_path) as fh:
+        assert json.load(fh)["traceEvents"]
+    # cell ids contain "/" — the per-cell dir must flatten them
+    import os
+    assert os.path.basename(os.path.dirname(trace_path)) == \
+        cell.cell_id.replace("/", "_")
+
+
+def test_overhead_sweep_quick():
+    """The paper's overhead-vs-servers reproduction: finite, sub-second
+    per server at every point of the 1→32 curve."""
+    import os
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.federation_bench import overhead_sweep
+    rows = overhead_sweep(quick=True, repeats=1)
+    assert [r["servers"] for r in rows] == [1, 2, 4, 8, 16, 32]
+    for r in rows:
+        assert np.isfinite(r["per_server_overhead_s"])
+        assert r["sub_second"] is True
+        assert r["round_overhead_s"] >= r["scaling_s"] >= 0.0
+        assert r["rounds"] > 0
